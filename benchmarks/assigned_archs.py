@@ -1,0 +1,66 @@
+"""TCM vs FCFS on ALL 10 assigned architectures (deliverable f x paper
+technique): cost models derived from each arch's real dimensions
+(`cost_model_for_arch`), request rate scaled to model capacity.
+
+For text-only backbones the multimodal "trucks" degrade to very long
+prompts — the resource-aware classifier handles them identically (the
+paper's own argument for smart over naive classification). See DESIGN.md
+§Arch-applicability.
+"""
+from repro.configs import ALIASES, get_config
+from repro.core.classifier import SmartClassifier
+from repro.core.estimator import ImpactEstimator
+from repro.core.profiler import WorkloadProfiler
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor, cost_model_for_arch
+from repro.serving.metrics import summarize
+from repro.serving.workload import WorkloadConfig, generate, \
+    profiling_workload
+
+from .common import csv_row
+
+
+def main(fast: bool = False):
+    rows = []
+    n = 120 if fast else 200
+    archs = list(ALIASES) if not fast else list(ALIASES)[:4]
+    print("arch,policy,M_ttft,O_ttft,O_viol,reduction_overall")
+    for arch in archs:
+        cfg = get_config(arch)
+        cm = cost_model_for_arch(cfg)
+        ex = SimExecutor(cm)
+        profile = WorkloadProfiler(ex, arch).build(
+            profiling_workload(n_per_modality=60))
+        est = ImpactEstimator.train(profile)
+        smart = SmartClassifier.train(est, profile)
+        # load scaled to capacity: ~2 rps for a 7B-class model
+        rate = max(0.05, min(8.0, 2.0 * 7e9 / cm.n_params))
+        out = {}
+        for pol in ["fcfs", "tcm"]:
+            eng = Engine(make_policy(pol), ex, smart,
+                         EngineConfig(token_budget=512))
+            reqs = generate(WorkloadConfig(
+                mix="MH", rate=rate, num_requests=n, seed=7,
+                video_frames_max=96))
+            out[pol] = summarize(eng.run(reqs))
+        f, t = out["fcfs"], out["tcm"]
+        red = 1 - t["overall"]["ttft_avg"] / max(f["overall"]["ttft_avg"], 1e-9)
+        for pol in ["fcfs", "tcm"]:
+            s = out[pol]
+            print(f"{arch},{pol},{s['motorcycle']['ttft_avg']:.3f},"
+                  f"{s['overall']['ttft_avg']:.3f},"
+                  f"{s['overall']['slo_violation_rate']:.3f},"
+                  f"{red if pol == 'tcm' else 0:.3f}")
+        rows.append(csv_row(f"assigned_{arch}_ttft_reduction", red,
+                            f"rate={rate:.2f}"))
+        # the paper's O1 on every assigned architecture: latency-critical
+        # requests must get dramatically faster (overall mean may regress
+        # under saturation, where TCM deliberately sacrifices trucks)
+        assert t["motorcycle"]["ttft_avg"] < \
+            0.5 * f["motorcycle"]["ttft_avg"], arch
+    return rows
+
+
+if __name__ == "__main__":
+    main()

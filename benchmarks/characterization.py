@@ -1,0 +1,40 @@
+"""Paper Fig. 2: per-modality KV footprint + TTFT, isolated, across models.
+
+Validates the orders-of-magnitude separation insight (text << image << video).
+"""
+from repro.serving.workload import WorkloadConfig, generate
+
+from .common import PAPER_MODELS, csv_row, pctl, stack
+
+
+def main(fast: bool = False):
+    rows = []
+    models = PAPER_MODELS[:3] if fast else PAPER_MODELS
+    print("model,modality,kv_tokens_p50,ttft_p50_s,ttft_p90_s")
+    for model in models:
+        ex, _, _, _ = stack(model)
+        reqs = generate(WorkloadConfig(mix="MH", num_requests=400, seed=1))
+        by_mod = {}
+        for r in reqs:
+            rec = ex.isolated_run(r)
+            by_mod.setdefault(r.modality.value, []).append(
+                (rec.prompt_tokens, rec.ttft))
+        for mod, vals in sorted(by_mod.items()):
+            kv = [v[0] for v in vals]
+            tt = [v[1] for v in vals]
+            print(f"{model},{mod},{pctl(kv,50):.0f},{pctl(tt,50):.4f},{pctl(tt,90):.4f}")
+            rows.append(csv_row(f"fig2_{model}_{mod}_ttft_p50", pctl(tt, 50),
+                                f"kv_p50={pctl(kv,50):.0f}"))
+    # insight check: video >> image >> text in both axes
+    ex, _, _, _ = stack("llava-7b")
+    reqs = generate(WorkloadConfig(mix="MH", num_requests=400, seed=1))
+    med = {}
+    for r in reqs:
+        rec = ex.isolated_run(r)
+        med.setdefault(r.modality.value, []).append(rec.ttft)
+    assert pctl(med["video"], 50) > pctl(med["image"], 50) > pctl(med["text"], 50)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

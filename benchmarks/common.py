@@ -1,0 +1,56 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.classifier import NaiveClassifier, SmartClassifier
+from repro.core.estimator import ImpactEstimator
+from repro.core.profiler import WorkloadProfiler
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor, make_cost_model
+from repro.serving.metrics import goodput, summarize
+from repro.serving.workload import WorkloadConfig, generate, \
+    profiling_workload
+
+PAPER_MODELS = ["llava-500m", "llava-7b", "gemma-4b", "gemma-12b",
+                "qwen-3b", "qwen-7b", "pixtral-12b"]
+
+_STACK_CACHE: dict = {}
+
+
+def stack(model: str = "llava-7b"):
+    """(executor, estimator, smart classifier, profile), cached per model."""
+    if model not in _STACK_CACHE:
+        cm = make_cost_model(model)
+        ex = SimExecutor(cm)
+        profile = WorkloadProfiler(ex, model).build(profiling_workload())
+        est = ImpactEstimator.train(profile)
+        smart = SmartClassifier.train(est, profile)
+        _STACK_CACHE[model] = (ex, est, smart, profile)
+    return _STACK_CACHE[model]
+
+
+def run_policy(policy: str, *, model: str = "llava-7b", mix: str = "MH",
+               rate: float = 2.0, n: int = 300, seed: int = 7,
+               classifier: str = "smart", kv_pages: int = 24576,
+               token_budget: int = 512, slo_scale: float = 5.0,
+               wl_kwargs: dict | None = None):
+    ex, est, smart, _ = stack(model)
+    cls = smart if classifier == "smart" else NaiveClassifier(est)
+    wl = WorkloadConfig(mix=mix, rate=rate, num_requests=n, seed=seed,
+                        **(wl_kwargs or {}))
+    eng = Engine(make_policy(policy), ex, cls,
+                 EngineConfig(token_budget=token_budget, kv_pages=kv_pages,
+                              slo_scale=slo_scale))
+    done = eng.run(generate(wl))
+    return summarize(done), done, eng
+
+
+def csv_row(name: str, value: float, derived: str = "") -> str:
+    return f"{name},{value:.6g},{derived}"
+
+
+def pctl(xs, q):
+    xs = [x for x in xs if x is not None]
+    return float(np.percentile(xs, q)) if xs else float("nan")

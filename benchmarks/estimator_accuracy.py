@@ -1,0 +1,23 @@
+"""Paper Fig. 7: Impact Estimator prediction error (should be ms-scale even
+for second-scale visual TTFTs)."""
+from .common import PAPER_MODELS, csv_row, stack
+
+
+def main(fast: bool = False):
+    rows = []
+    models = PAPER_MODELS[:2] if fast else PAPER_MODELS
+    print("model,modality,kind,mean_abs_err_ms,p90_abs_err_ms")
+    for model in models:
+        _, est, _, profile = stack(model)
+        errs = est.errors(profile)
+        for mod, e in sorted(errs.items()):
+            kind = est.models[mod].kind
+            import numpy as np
+            print(f"{model},{mod},{kind},{e.mean()*1e3:.3f},"
+                  f"{np.percentile(e,90)*1e3:.3f}")
+            rows.append(csv_row(f"fig7_{model}_{mod}_mae_ms", e.mean() * 1e3))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

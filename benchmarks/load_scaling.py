@@ -1,0 +1,23 @@
+"""Paper Fig. 12: increasing request rate; overall norm latency, avg TTFT,
+P90 TTFT. TCM must degrade most gracefully."""
+from .common import csv_row, pctl, run_policy
+
+
+def main(fast: bool = False):
+    rows = []
+    n = 120 if fast else 250
+    rates = [1.0, 2.0, 3.0] if fast else [1.0, 1.5, 2.0, 2.5, 3.0]
+    print("rate,policy,overall_norm_lat,ttft_avg,ttft_p90")
+    for rate in rates:
+        for pol in ["fcfs", "edf", "tcm"]:
+            s, done, _ = run_policy(pol, rate=rate, n=n)
+            p90 = pctl([r.ttft() for r in done], 90)
+            print(f"{rate},{pol},{s['overall']['norm_latency_avg']:.4f},"
+                  f"{s['overall']['ttft_avg']:.3f},{p90:.3f}")
+            if pol == "tcm":
+                rows.append(csv_row(f"fig12_rate{rate}_tcm_ttft_p90", p90))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Figs. 4 + 14: performance as KV-cache capacity shrinks
+(100% -> 50% -> 25% -> 12.5%), FCFS (Fig 4) vs TCM (Fig 14)."""
+import argparse
+
+from .common import csv_row, run_policy
+
+FULL = 24576
+
+
+def main(fast: bool = False, policy: str | None = None):
+    rows = []
+    n = 150 if fast else 300
+    policies = [policy] if policy else ["fcfs", "tcm"]
+    print("policy,kv_frac,class,ttft_avg,viol_rate,severity,preemptions")
+    for pol in policies:
+        for frac in [1.0, 0.5, 0.25, 0.125]:
+            s, _, _ = run_policy(pol, n=n, kv_pages=int(FULL * frac))
+            for g in ["motorcycle", "truck", "overall"]:
+                print(f"{pol},{frac},{g},{s[g]['ttft_avg']:.3f},"
+                      f"{s[g]['slo_violation_rate']:.3f},"
+                      f"{s[g]['violation_severity_avg']:.2f},{s[g]['preemptions']}")
+            rows.append(csv_row(f"fig4_{pol}_kv{frac}_overall_viol",
+                                s["overall"]["slo_violation_rate"]))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default=None)
+    main(policy=ap.parse_args().policy)

@@ -1,0 +1,24 @@
+"""Paper Fig. 11: preemption counts + aggregate preempted time per class.
+TCM must show ZERO motorcycle preemptions."""
+from .common import csv_row, run_policy
+
+
+def main(fast: bool = False):
+    rows = []
+    n = 150 if fast else 300
+    # tighter memory to induce preemption pressure
+    print("policy,class,preemptions,preempted_time_s")
+    for pol in ["fcfs", "edf", "tcm"]:
+        s, _, _ = run_policy(pol, n=n, kv_pages=6144)
+        for g in ["motorcycle", "car", "truck", "overall"]:
+            print(f"{pol},{g},{s[g]['preemptions']},{s[g]['preempted_time']:.1f}")
+        rows.append(csv_row(f"fig11_{pol}_moto_preemptions",
+                            s["motorcycle"]["preemptions"]))
+        if pol == "tcm":
+            assert s["motorcycle"]["preemptions"] == 0, \
+                "TCM must never preempt motorcycles"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline report (deliverable g): reads experiments/dryrun/*.json and
+prints per (arch x shape x mesh): the three terms, dominant bottleneck,
+MODEL_FLOPS / compiled-FLOPs ratio, and a what-would-move-it note."""
+import glob
+import json
+import os
+
+from .common import csv_row
+
+NOTES = {
+    ("compute", "train"): "more chips or lower remat factor / MoE dispatch cost",
+    ("compute", "prefill"): "near roofline; bigger per-chip batch or kernel fusion",
+    ("compute", "decode"): "decode should not be compute-bound; check padding waste",
+    ("memory", "decode"): "shrink KV reads: GQA head dedup, window caches, quantized KV",
+    ("memory", "train"): "activation sharding (embed_act->model) or larger per-chip arithmetic intensity",
+    ("memory", "prefill"): "stream KV writes; fuse attention (flash) to cut activation traffic",
+    ("collective", "train"): "overlap FSDP all-gathers with compute; shard params on fewer axes",
+    ("collective", "prefill"): "reduce TP all-reduces: 2D sharding or comm/compute overlap",
+    ("collective", "decode"): "decode all-reduces dominate at tiny per-step compute; batch bigger or TP smaller",
+}
+
+
+def main(fast: bool = False, outdir: str = "experiments/dryrun"):
+    rows = []
+    files = sorted(glob.glob(os.path.join(outdir, "*.json")))
+    files = [f for f in files if "FAILURES" not in f]
+    if not files:
+        print("# no dry-run results found; run repro.launch.dryrun_all first")
+        return rows
+    print("arch,shape,mesh,opts,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio,note")
+    for f in files:
+        d = json.load(open(f))
+        r = d.get("roofline")
+        if not r:
+            continue
+        opts = "+".join(d.get("opts", [])) or "baseline"
+        kind = "train" if d["shape"].startswith("train") else (
+            "prefill" if "prefill" in d["shape"] else "decode")
+        note = NOTES.get((r["dominant"], kind), "")
+        print(f"{d['arch']},{d['shape']},{d['mesh']},{opts},"
+              f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+              f"{r['collective_s']:.3e},{r['dominant']},"
+              f"{r['useful_flops_ratio']:.3f},{note}")
+        rows.append(csv_row(
+            f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}_{opts}_dominant_s",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]),
+            r["dominant"]))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

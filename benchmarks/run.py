@@ -1,0 +1,50 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,value,derived`` CSV rows for every benchmark."""
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (ablation, assigned_archs, characterization, decode_priority, e2e,
+                   estimator_accuracy, load_scaling, memory_pressure,
+                   multi_replica, preemptions, priority_curves, roofline,
+                   slo_scales, ttft_breakdown, workload_mix, workloads_tcm)
+    benches = [
+        ("fig2_characterization", characterization),
+        ("fig3_workload_mix", workload_mix),
+        ("fig4_14_memory_pressure", memory_pressure),
+        ("fig6_ttft_breakdown", ttft_breakdown),
+        ("fig7_estimator_accuracy", estimator_accuracy),
+        ("fig8_ablation", ablation),
+        ("fig9_priority_curves", priority_curves),
+        ("fig10_e2e", e2e),
+        ("fig11_preemptions", preemptions),
+        ("fig12_load_scaling", load_scaling),
+        ("fig13_workloads_tcm", workloads_tcm),
+        ("fig15_slo_scales", slo_scales),
+        ("beyond_decode_priority", decode_priority),
+        ("beyond_multi_replica", multi_replica),
+        ("assigned_archs_tcm", assigned_archs),
+        ("roofline", roofline),
+    ]
+    all_rows = []
+    for name, mod in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        rows = mod.main(fast=args.fast) or []
+        all_rows.extend(rows)
+        print(f"# {name} done in {time.time()-t0:.1f}s")
+    print("\n===== CSV SUMMARY (name,value,derived) =====")
+    for row in all_rows:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig. 15: violation rate, severity and goodput vs SLO scale."""
+from repro.serving.metrics import goodput
+
+from .common import csv_row, run_policy
+
+
+def main(fast: bool = False):
+    rows = []
+    n = 150 if fast else 300
+    print("slo_scale,class,viol_rate,severity,goodput_req_s")
+    for scale in [2.5, 5.0, 10.0, 20.0]:
+        s, done, _ = run_policy("tcm", n=n, slo_scale=scale)
+        gp = goodput(done)
+        for g in ["motorcycle", "car", "truck"]:
+            print(f"{scale},{g},{s[g]['slo_violation_rate']:.3f},"
+                  f"{s[g]['violation_severity_avg']:.2f},{gp:.3f}")
+        rows.append(csv_row(f"fig15_slo{scale}_overall_viol",
+                            s["overall"]["slo_violation_rate"],
+                            f"goodput={gp:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

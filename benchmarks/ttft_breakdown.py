@@ -1,0 +1,31 @@
+"""Paper Fig. 6: TTFT decomposition (preprocess / encode / prefill) per
+modality and model."""
+from repro.serving.workload import WorkloadConfig, generate
+
+from .common import PAPER_MODELS, csv_row, stack
+
+
+def main(fast: bool = False):
+    rows = []
+    models = PAPER_MODELS[:3] if fast else PAPER_MODELS
+    print("model,modality,preprocess_s,encode_s,prefill_s")
+    for model in models:
+        ex, _, _, _ = stack(model)
+        reqs = generate(WorkloadConfig(mix="MH", num_requests=300, seed=2))
+        agg = {}
+        for r in reqs:
+            rec = ex.isolated_run(r)
+            a = agg.setdefault(r.modality.value, [0.0, 0.0, 0.0, 0])
+            a[0] += rec.preprocess_time
+            a[1] += rec.encode_time
+            a[2] += rec.prefill_time
+            a[3] += 1
+        for mod, (p, e, f, n) in sorted(agg.items()):
+            print(f"{model},{mod},{p/n:.4f},{e/n:.4f},{f/n:.4f}")
+            rows.append(csv_row(f"fig6_{model}_{mod}_prefill_share",
+                                (f / n) / max((p + e + f) / n, 1e-12)))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

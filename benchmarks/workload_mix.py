@@ -1,0 +1,23 @@
+"""Paper Fig. 3: FCFS (vLLM) degradation as multimodal intensity grows
+(T0 -> ML -> MH). Text requests suffer most."""
+from .common import csv_row, run_policy
+
+
+def main(fast: bool = False):
+    rows = []
+    n = 150 if fast else 300
+    print("mix,class,ttft_avg,norm_lat,viol_rate,severity")
+    for mix in ["T0", "ML", "MH"]:
+        s, _, _ = run_policy("fcfs", mix=mix, n=n)
+        for g in ["motorcycle", "car", "truck", "overall"]:
+            if s[g] is None:
+                continue
+            print(f"{mix},{g},{s[g]['ttft_avg']:.3f},{s[g]['norm_latency_avg']:.4f},"
+                  f"{s[g]['slo_violation_rate']:.3f},{s[g]['violation_severity_avg']:.2f}")
+        rows.append(csv_row(f"fig3_{mix}_overall_ttft", s["overall"]["ttft_avg"],
+                            f"viol={s['overall']['slo_violation_rate']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig. 13: TCM under T0 / ML / MH. TCM must excel on text-only too
+(motorcycle TTFT ~0.05-0.15s, violations < a few %)."""
+from .common import csv_row, run_policy
+
+
+def main(fast: bool = False):
+    rows = []
+    n = 150 if fast else 300
+    print("mix,class,ttft_avg,viol_rate,severity")
+    for mix in ["T0", "ML", "MH"]:
+        s, _, _ = run_policy("tcm", mix=mix, n=n)
+        for g in ["motorcycle", "car", "truck", "overall"]:
+            if s[g] is None:
+                continue
+            print(f"{mix},{g},{s[g]['ttft_avg']:.3f},"
+                  f"{s[g]['slo_violation_rate']:.3f},"
+                  f"{s[g]['violation_severity_avg']:.2f}")
+        rows.append(csv_row(f"fig13_{mix}_moto_ttft",
+                            s["motorcycle"]["ttft_avg"]))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

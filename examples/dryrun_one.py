@@ -1,0 +1,13 @@
+"""Lower + compile ONE (arch x shape) combination on the 512-chip
+multi-pod production mesh and print its roofline terms.
+
+  PYTHONPATH=src python examples/dryrun_one.py [arch] [shape]
+"""
+import sys
+
+from repro.launch.dryrun import run_one
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "gemma3-27b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+result = run_one(arch, shape, "multi", "experiments/dryrun")
+print("\nroofline:", result["roofline"])

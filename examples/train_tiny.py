@@ -1,0 +1,16 @@
+"""End-to-end training driver: train the ~100M xLSTM (an assigned arch!) on
+the synthetic packed-token pipeline for a few hundred steps on CPU, with
+checkpoint save + resume.
+
+  PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "xlstm-125m",
+            "--steps", "200", "--batch", "4", "--seq", "64",
+            "--ckpt", "experiments/xlstm_125m.npz", "--log-every", "20"] \
+    + sys.argv[1:]
+from repro.launch.train import main
+
+main()

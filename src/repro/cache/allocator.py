@@ -1,0 +1,72 @@
+"""Page allocator: the engine-side memory accounting for the KV cache.
+
+This is the substrate the paper's memory-pressure experiments (§2.4, §4.3.2)
+exercise: KV capacity is expressed in fixed-size pages; requests allocate
+pages as their context grows and free them on completion/preemption. The
+scheduler consults ``can_allocate``/``utilization`` for admission and
+preemption decisions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class OutOfPages(Exception):
+    pass
+
+
+@dataclass
+class BlockAllocator:
+    num_pages: int
+    page_size: int
+    _free: list[int] = field(default_factory=list)
+    _owned: dict[str, list[int]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._free = list(range(self.num_pages - 1, -1, -1))
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / max(self.num_pages, 1)
+
+    def pages_for_tokens(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def can_allocate(self, tokens: int) -> bool:
+        return self.pages_for_tokens(tokens) <= self.free_pages
+
+    def pages_of(self, rid: str) -> list[int]:
+        return list(self._owned.get(rid, ()))
+
+    # -- mutation ----------------------------------------------------------
+    def allocate(self, rid: str, tokens: int) -> list[int]:
+        """Ensure `rid` owns enough pages for `tokens` total tokens."""
+        have = len(self._owned.get(rid, ()))
+        need = self.pages_for_tokens(tokens) - have
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            raise OutOfPages(
+                f"{rid}: need {need} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned.setdefault(rid, []).extend(pages)
+        return pages
+
+    def free(self, rid: str) -> int:
+        pages = self._owned.pop(rid, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    def check_invariants(self) -> None:
+        owned = [p for ps in self._owned.values() for p in ps]
+        assert len(set(owned)) == len(owned), "double-allocated page"
+        assert set(owned).isdisjoint(self._free), "page both owned and free"
+        assert len(owned) + len(self._free) == self.num_pages, "page leak"

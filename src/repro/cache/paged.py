@@ -1,0 +1,92 @@
+"""Paged KV store: JAX-side page arrays + write/read ops per layer stack.
+
+Layout per layer: (num_pages, page_size, KV, hd), matching the Pallas
+paged-attention kernel. Writes are block-table scatters; the whole store is
+functionally updated (donated in jit on real deployments).
+
+SSM/xLSTM state caches have *constant* per-request footprint, so they use a
+slot store (one row per active request) rather than pages — the classifier
+sees this as a constant memory feature (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class PagedKVStore:
+    """One layer's paged KV arrays; engine holds one per attention layer."""
+    k_pages: jax.Array  # (P, page, KV, hd)
+    v_pages: jax.Array
+
+    @classmethod
+    def create(cls, num_pages, page_size, kv_heads, head_dim,
+               dtype=jnp.bfloat16):
+        shape = (num_pages, page_size, kv_heads, head_dim)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    @property
+    def page_size(self):
+        return self.k_pages.shape[1]
+
+    def write(self, k_new, v_new, page_ids, start: int):
+        """Write S new tokens for ONE request.
+
+        k_new/v_new: (S, KV, hd); page_ids: (n,) python/int32 array of the
+        request's pages; start: the request's context length before this
+        write. Returns updated store.
+        """
+        S = k_new.shape[0]
+        page = self.page_size
+        pos = start + jnp.arange(S)
+        pids = jnp.asarray(page_ids)[pos // page]
+        offs = pos % page
+        k_pages = self.k_pages.at[pids, offs].set(
+            k_new.astype(self.k_pages.dtype))
+        v_pages = self.v_pages.at[pids, offs].set(
+            v_new.astype(self.v_pages.dtype))
+        return PagedKVStore(k_pages, v_pages)
+
+    def gather(self, page_ids):
+        """(n_pages,) -> contiguous (n_pages*page, KV, hd) k, v."""
+        pids = jnp.asarray(page_ids)
+        k = self.k_pages[pids].reshape(-1, *self.k_pages.shape[2:])
+        v = self.v_pages[pids].reshape(-1, *self.v_pages.shape[2:])
+        return k, v
+
+
+jax.tree_util.register_pytree_node(
+    PagedKVStore,
+    lambda s: ((s.k_pages, s.v_pages), None),
+    lambda _, c: PagedKVStore(*c),
+)
+
+
+@dataclass
+class SlotStore:
+    """Constant-size per-request state (SSM/xLSTM/conv): one slot per row."""
+    data: dict  # name -> (slots, ...) arrays
+
+    @classmethod
+    def create(cls, num_slots: int, shapes: dict, dtypes: dict | None = None):
+        dtypes = dtypes or {}
+        return cls({name: jnp.zeros((num_slots,) + tuple(shape),
+                                    dtypes.get(name, jnp.float32))
+                    for name, shape in shapes.items()})
+
+    def read(self, slot: int):
+        return {k: v[slot] for k, v in self.data.items()}
+
+    def write(self, slot: int, values: dict):
+        return SlotStore({k: self.data[k].at[slot].set(values[k])
+                          for k in self.data})
+
+
+jax.tree_util.register_pytree_node(
+    SlotStore,
+    lambda s: (tuple(s.data.values()), tuple(s.data.keys())),
+    lambda keys, vals: SlotStore(dict(zip(keys, vals))),
+)

@@ -1,0 +1,48 @@
+"""Queue Manager (paper §3.5).
+
+Three independent FIFO queues (trucks, cars, motorcycles) with queue-level
+metrics (length, waiting time, aggregate estimated prefill). FCFS is
+preserved *within* each queue; cross-queue ordering is delegated to the
+Priority Regulator via the scheduler.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.serving.request import Request, VehicleClass
+
+
+@dataclass
+class QueueManager:
+    queues: dict = field(default_factory=lambda: {
+        v: deque() for v in VehicleClass})
+
+    def push(self, req: Request, now: float) -> None:
+        assert req.vclass is not None, "classify before enqueue"
+        req.enqueue_time = now
+        self.queues[req.vclass].append(req)
+
+    def remove(self, req: Request) -> None:
+        self.queues[req.vclass].remove(req)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def peek_all(self) -> list[Request]:
+        return [r for q in self.queues.values() for r in q]
+
+    def heads(self) -> list[Request]:
+        """FCFS head of each class queue (candidates for cross-queue pick)."""
+        return [q[0] for q in self.queues.values() if q]
+
+    def metrics(self, now: float) -> dict:
+        out = {}
+        for v, q in self.queues.items():
+            waits = [r.waiting_time(now) for r in q]
+            out[v.value] = {
+                "len": len(q),
+                "avg_wait": sum(waits) / len(waits) if waits else 0.0,
+                "est_prefill_sum": sum(r.est_prefill for r in q),
+            }
+        return out

@@ -1,0 +1,118 @@
+"""Scheduling policies: TCM-Serve and the paper's baselines.
+
+Each policy defines a total order over requests via ``rank`` (lower = run
+earlier). The engine uses ``order`` for admission each iteration and
+``pick_victim`` for preemption under memory pressure. Victim selection for
+*admission* requires the victim to rank strictly LOWER than the candidate
+(prevents preemption cycles; matches vLLM's priority preemption).
+
+Policies:
+  * fcfs            — vLLM default (arrival order).
+  * edf             — Earliest Deadline First (deadline = arrival + SLO).
+  * static          — static M->C->T priority, FCFS within class.
+  * naive-aging     — priority purely by age (ablation).
+  * tcm             — full TCM-Serve: smart classifier + Priority Regulator
+                      (aging); motorcycles are never preempted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.serving.request import Request, VehicleClass
+
+from .regulator import PriorityRegulator
+
+CLASS_RANK = {VehicleClass.MOTORCYCLE: 0, VehicleClass.CAR: 1,
+              VehicleClass.TRUCK: 2}
+
+
+class SchedulerPolicy:
+    name = "base"
+
+    def rank(self, req: Request, now: float):
+        """Sortable key; lower = scheduled earlier."""
+        raise NotImplementedError
+
+    def order(self, waiting: list[Request], now: float) -> list[Request]:
+        return sorted(waiting, key=lambda r: self.rank(r, now))
+
+    def _victim_pool(self, running: list[Request], now: float,
+                     for_req: Request | None):
+        pool = running
+        if for_req is not None:
+            bar = self.rank(for_req, now)
+            pool = [r for r in pool if self.rank(r, now) > bar]
+        return pool
+
+    def pick_victim(self, running: list[Request], now: float,
+                    for_req: Request | None = None) -> Request | None:
+        """Request to preempt (None = don't preempt). If ``for_req`` is
+        given, only strictly lower-priority requests are eligible."""
+        pool = self._victim_pool(running, now, for_req)
+        if not pool:
+            return None
+        return max(pool, key=lambda r: self.rank(r, now))
+
+
+class FCFSPolicy(SchedulerPolicy):
+    """vLLM default: first-come-first-served (+ chunked prefill in engine)."""
+    name = "fcfs"
+
+    def rank(self, req, now):
+        return req.arrival
+
+
+class EDFPolicy(SchedulerPolicy):
+    """Earliest-deadline-first; aggressive deadline-driven preemption."""
+    name = "edf"
+
+    def rank(self, req, now):
+        return req.arrival + req.slo
+
+
+class StaticPriorityPolicy(SchedulerPolicy):
+    """Motorcycles -> cars -> trucks, FCFS within class (paper §3.4 study)."""
+    name = "static"
+
+    def rank(self, req, now):
+        return (CLASS_RANK[req.vclass], req.arrival)
+
+
+class NaiveAgingPolicy(SchedulerPolicy):
+    """Priority purely by age, ignoring the class hierarchy (ablation)."""
+    name = "naive-aging"
+
+    def rank(self, req, now):
+        return req.enqueue_time
+
+
+@dataclass
+class TCMPolicy(SchedulerPolicy):
+    """Full TCM-Serve: dynamic priority = static class priority + aging.
+
+    Scores are recomputed every scheduling iteration (the Priority
+    Regulator 'continuously revisits priorities'). Motorcycles are never
+    preempted (paper Fig. 11 shows zero motorcycle preemptions).
+    """
+    regulator: PriorityRegulator = field(default_factory=PriorityRegulator)
+    name = "tcm"
+
+    def rank(self, req, now):
+        return (self.regulator.request_score(req, now), req.arrival)
+
+    def pick_victim(self, running, now, for_req=None):
+        pool = [r for r in self._victim_pool(running, now, for_req)
+                if r.vclass is not VehicleClass.MOTORCYCLE]
+        if not pool:
+            return None
+        return max(pool, key=lambda r: self.rank(r, now))
+
+
+def make_policy(name: str) -> SchedulerPolicy:
+    return {
+        "fcfs": FCFSPolicy,
+        "edf": EDFPolicy,
+        "static": StaticPriorityPolicy,
+        "naive-aging": NaiveAgingPolicy,
+        "tcm": TCMPolicy,
+    }[name]()

@@ -1,0 +1,34 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes in Python); on TPU set ``interpret=False``. ``ref.py`` holds the
+pure-jnp oracles used by tests and by the engine's portable fallback path.
+"""
+from __future__ import annotations
+
+import jax
+
+from .paged_attention import paged_attention as _paged
+from .prefill_attention import prefill_attention as _prefill
+from .ref import ref_paged_attention, ref_prefill_attention
+
+# flipped to False on real TPU deployments
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def prefill_attention(q, k, v, *, q_start=0, window=0, softcap=0.0,
+                      use_kernel=True):
+    if not use_kernel:
+        return ref_prefill_attention(q, k, v, q_start=q_start, window=window,
+                                     softcap=softcap)
+    return _prefill(q, k, v, q_start=q_start, window=window, softcap=softcap,
+                    interpret=INTERPRET)
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *, softcap=0.0,
+                    use_kernel=True):
+    if not use_kernel:
+        return ref_paged_attention(q, k_pages, v_pages, block_table, lengths,
+                                   softcap=softcap)
+    return _paged(q, k_pages, v_pages, block_table, lengths, softcap=softcap,
+                  interpret=INTERPRET)

@@ -1,0 +1,107 @@
+"""Paged decode attention Pallas kernel (TPU target).
+
+The serving engine's decode hot-spot: one query token per sequence attends
+over a block-table-indexed paged KV cache. TPU adaptation of vLLM's
+PagedAttention (see DESIGN.md): pages are dense (num_pages, page_size, KV,
+hd) arrays; the block table rides in scalar-prefetch SMEM so the BlockSpec
+index_map can stage exactly the needed K/V page HBM->VMEM per grid step.
+
+Grid: (B, max_pages) — page axis innermost; online softmax across pages with
+the (KV, G, hd) accumulator in VMEM scratch (G = query heads per KV head).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_table, lengths, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size: int, max_pages: int,
+            softcap: float, sm_scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths[b]
+    n_pages = (length + page_size - 1) // page_size
+
+    @pl.when(p < n_pages)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)          # (KV, G, hd)
+        k = k_ref[0].astype(jnp.float32)          # (page_size, KV, hd)
+        v = v_ref[0].astype(jnp.float32)
+        KV, G, hd = q.shape
+
+        s = jnp.einsum("kgd,tkd->kgt", q, k) * sm_scale      # (KV, G, T)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        tpos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        s = jnp.where(tpos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (KV, G, 1)
+        m_cur = jnp.max(s, axis=2, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pexp = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(pexp, axis=2, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.einsum("kgt,tkd->kgd", pexp, v)
+        m_ref[...] = m_new
+
+    @pl.when(p == max_pages - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    softcap: float = 0.0, interpret: bool = True):
+    """q: (B,H,hd); k_pages/v_pages: (P,page_size,KV,hd);
+    block_table: (B,max_pages) int32; lengths: (B,) int32. -> (B,H,hd)."""
+    B, H, hd = q.shape
+    P, page_size, KV, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+
+    kernel = functools.partial(
+        _kernel, page_size=page_size, max_pages=max_pages, softcap=softcap,
+        sm_scale=1.0 / math.sqrt(hd))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, p, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page_size, KV, hd),
+                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, KV, hd),
+                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd), lambda b, p, bt, ln: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G, 1), jnp.float32),
+            pltpu.VMEM((KV, G, 1), jnp.float32),
+            pltpu.VMEM((KV, G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, H, hd)

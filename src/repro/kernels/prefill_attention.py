@@ -1,0 +1,124 @@
+"""Chunked-prefill flash attention Pallas kernel (TPU target).
+
+The serving engine's prefill hot-spot: a chunk of Sq queries (global
+positions q_start..q_start+Sq) attends over the full Skv context written so
+far. Online-softmax accumulation over key blocks; MXU-aligned 128 tiles.
+
+Grid: (B, H, nq, nk) with the key-block axis innermost; running max/sum and
+the output accumulator live in VMEM scratch and are re-initialized at k==0,
+finalized at k==nk-1 (canonical TPU flash pattern).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            q_start: int, window: int, softcap: float, bq: int, bk: int,
+            nk: int, sm_scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+
+    qpos = q_start + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos <= qpos
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                       # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_start", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def prefill_attention(q, k, v, *, q_start: int = 0, window: int = 0,
+                      softcap: float = 0.0, bq: int = 128, bk: int = 128,
+                      interpret: bool = True):
+    """q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd). Returns (B,Sq,H,hd).
+
+    GQA handled by replicating kv heads at the wrapper level (ops.py keeps
+    the HBM-resident cache deduplicated; the repeat happens on the fly).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    nq, nk = Sq_p // bq, Skv_p // bk
+
+    # layout: (B, H, S, hd) so the head dim is a grid axis
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, q_start=q_start, window=window, softcap=softcap, bq=bq,
+        bk=bk, nk=nk, sm_scale=1.0 / math.sqrt(hd))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    if pad_q:
+        out = out[:, :Sq]
+    return out

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernel tests assert against
+(``jnp.allclose`` sweeps over shapes/dtypes, interpret mode).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_prefill_attention(q, k, v, *, q_start: int = 0, window: int = 0,
+                          softcap: float = 0.0):
+    """Chunked-prefill causal attention oracle.
+
+    q: (B, Sq, H, hd) — queries at global positions [q_start, q_start+Sq)
+    k, v: (B, Skv, KV, hd) — the full context so far (Skv >= q_start+Sq)
+    window: sliding window size (0 = full causal)
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qpos = q_start + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                        softcap: float = 0.0):
+    """Decode-phase paged attention oracle.
+
+    q: (B, H, hd) — one query token per sequence
+    k_pages/v_pages: (num_pages, page_size, KV, hd)
+    block_table: (B, max_pages) int32 — page ids per sequence
+    lengths: (B,) int32 — context length (tokens) per sequence
+    """
+    B, H, hd = q.shape
+    P, page_size, KV, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    # gather pages into contiguous (B, max_pages*page_size, KV, hd)
+    k = k_pages[block_table].reshape(B, max_pages * page_size, KV, hd)
+    v = v_pages[block_table].reshape(B, max_pages * page_size, KV, hd)
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    kpos = jnp.arange(max_pages * page_size)[None, :]
+    mask = kpos < lengths[:, None]
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

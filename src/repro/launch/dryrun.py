@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+other import because jax locks the device count on first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --list   # show all pairs
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ALIASES, get_config
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.models import transformer as T
+from repro.models.config import pad_for_tp
+from repro.models.params import (abstract_params, param_count, param_pspecs,
+                                 tree_map_decls)
+from repro.models.sharding import use_rules
+from repro.train.loop import abstract_train_state, train_step
+from repro.train.optimizer import AdamWState
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, long=True),
+}
+
+# long_500k runs only where attention state is sub-quadratic / bounded
+# (see DESIGN.md §Shape skips); whisper's decode ctx is architecture-bounded.
+LONG_OK = {"jamba-1.5-large-398b", "xlstm-125m", "gemma3-27b"}
+
+TP = 16  # model-axis degree on both meshes
+
+
+def runnable_pairs():
+    pairs = []
+    for arch in ALIASES:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                continue
+            pairs.append((arch, shape))
+    return pairs
+
+
+# ---------------------------------------------------------------------------
+def batch_specs(cfg, kind: str, seq: int, batch: int):
+    """ShapeDtypeStructs + logical axes for every model input."""
+    i32 = jnp.int32
+    specs, axes = {}, {}
+    if kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        axes["tokens"] = ("batch", "seq")
+        axes["labels"] = ("batch", "seq")
+        if cfg.arch_type == "vlm":
+            specs["mm_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.mm_tokens, cfg.d_model), cfg.dtype)
+            axes["mm_embeds"] = ("batch", None, "embed_act")
+            specs["positions"] = jax.ShapeDtypeStruct((batch, seq, 3), i32)
+            axes["positions"] = ("batch", "seq", None)
+        if cfg.is_encoder_decoder:
+            specs["enc_frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+            axes["enc_frames"] = ("batch", None, "embed_act")
+    elif kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        axes["tokens"] = ("batch", "seq")
+        if cfg.arch_type == "vlm":
+            specs["mm_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.mm_tokens, cfg.d_model), cfg.dtype)
+            axes["mm_embeds"] = ("batch", None, "embed_act")
+            specs["positions"] = jax.ShapeDtypeStruct((batch, seq, 3), i32)
+            axes["positions"] = ("batch", "seq", None)
+        if cfg.is_encoder_decoder:
+            specs["enc_frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+            axes["enc_frames"] = ("batch", None, "embed_act")
+    else:  # decode: ONE new token against a seq-length KV cache
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, 1), i32)
+        axes["tokens"] = ("batch", "seq")
+        pos_shape = (batch, 1, 3) if cfg.arch_type == "vlm" else (batch, 1)
+        specs["positions"] = jax.ShapeDtypeStruct(pos_shape, i32)
+        axes["positions"] = ("batch", "seq", None)[: len(pos_shape)]
+    return specs, axes
+
+
+def input_specs(arch: str, shape: str, opts: frozenset = frozenset()):
+    """Public helper: (cfg, step_fn, abstract args, shardings builder)."""
+    cfg = get_config(arch)
+    if "seq_par_repl" not in opts:
+        # heads/vocab padding is only needed when those dims are TP-sharded
+        cfg = pad_for_tp(cfg, TP)
+    meta = SHAPES[shape]
+    specs, axes = batch_specs(cfg, meta["kind"], meta["seq"], meta["batch"])
+    return cfg, meta, specs, axes
+
+
+# ---------------------------------------------------------------------------
+def build(arch: str, shape: str, mesh, rules, opts=frozenset()):
+    cfg, meta, specs, axes = input_specs(arch, shape, opts)
+    kind = meta["kind"]
+    kv_dtype = jnp.int8 if "kv_int8" in opts else jnp.bfloat16
+
+    def shard(ax):
+        from repro.models.params import logical_to_pspec
+        return NamedSharding(mesh, logical_to_pspec(tuple(ax), rules))
+
+    batch_shardings = {k: shard(axes[k]) for k in specs}
+
+    if kind == "train":
+        state = abstract_train_state(cfg)
+        decls = T.model_decls(cfg)
+        p_specs = param_pspecs(decls, rules)
+        p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                               is_leaf=lambda x: isinstance(x, PartitionSpec))
+        opt_shard = AdamWState(NamedSharding(mesh, PartitionSpec()),
+                               p_shard, p_shard)
+        state_shard = type(state)(p_shard, opt_shard)
+
+        def fn(st, batch):
+            return train_step(st, batch, cfg, remat=True)
+
+        jitted = jax.jit(fn, in_shardings=(state_shard, batch_shardings),
+                         donate_argnums=(0,))
+        args = (state, specs)
+    else:
+        decls = T.model_decls(cfg)
+        params = abstract_params(decls)
+        p_specs = param_pspecs(decls, rules)
+        p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                               is_leaf=lambda x: isinstance(x, PartitionSpec))
+        cache_len = meta["seq"]
+        cdecls = T.cache_decls(cfg, meta["batch"], cache_len, dtype=kv_dtype,
+                               window_cache="window_cache" in opts)
+        cache = abstract_params(cdecls)
+        c_specs = param_pspecs(cdecls, rules)
+        c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                               is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+        if kind == "prefill":
+            def fn(p, cache, batch):
+                toks = batch["tokens"]
+                logits, new_cache, _ = T.forward(
+                    p, cfg, toks, positions=batch.get("positions"),
+                    mm_embeds=batch.get("mm_embeds"),
+                    enc_frames=batch.get("enc_frames"), cache=cache,
+                    q_start=0, last_only=True)
+                return logits, new_cache
+        else:
+            def fn(p, cache, batch):
+                logits, new_cache, _ = T.forward(
+                    p, cfg, batch["tokens"], positions=batch["positions"],
+                    cache=cache)
+                return logits, new_cache
+
+        jitted = jax.jit(fn, in_shardings=(p_shard, c_shard, batch_shardings),
+                         donate_argnums=(1,))
+        args = (params, cache, specs)
+    return cfg, jitted, args
+
+
+# ---------------------------------------------------------------------------
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+               "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shapes: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Collective op bytes, trip-count aware.
+
+    Collectives inside ``lax.scan``-generated While bodies appear once in the
+    HLO text but execute trip-count times; we parse computations, find each
+    while's body + the loop bound (max integer constant in its condition
+    region), and multiply through (recursively for nested scans, e.g. remat).
+    """
+    # split into computations
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+
+    # per-computation: collectives and (body, condition) pairs
+    coll_of: dict[str, list[tuple[str, int]]] = {}
+    whiles_of: dict[str, list[tuple[str, str]]] = {}
+    for name, lines in comps.items():
+        colls, whiles = [], []
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if cm:
+                colls.append((cm.group(2), _shape_bytes(cm.group(1))))
+            wm = _WHILE_RE.search(line)
+            if wm:
+                whiles.append((wm.group(1), wm.group(2)))
+        coll_of[name] = colls
+        whiles_of[name] = whiles
+
+    def trip_count(cond: str) -> int:
+        consts = [int(c) for line in comps.get(cond, ())
+                  for c in _CONST_RE.findall(line)]
+        return max(consts, default=1) or 1
+
+    out: dict[str, dict] = {}
+
+    def walk(comp: str, mult: int, seen: tuple):
+        if comp in seen or comp not in comps:
+            return
+        for op, nbytes in coll_of.get(comp, ()):
+            rec = out.setdefault(op, {"count": 0, "bytes": 0})
+            rec["count"] += mult
+            rec["bytes"] += nbytes * mult
+        for cond, body in whiles_of.get(comp, ()):
+            walk(body, mult * trip_count(cond), seen + (comp,))
+
+    if entry is not None:
+        walk(entry, 1, ())
+    else:  # fallback: flat scan, no trip scaling
+        for name in comps:
+            walk(name, 1, (object(),))
+    return out
+
+
+def run_one(arch: str, shape: str, mesh_kind: str, outdir: str,
+            opts: frozenset = frozenset()) -> dict:
+    multi = mesh_kind == "multi"
+    meta = SHAPES[shape]
+    mode = ("train" if meta["kind"] == "train"
+            else ("long_ctx" if meta.get("long") else "serve"))
+    mesh = make_production_mesh(multi_pod=multi)
+    rules = make_rules(mode, multi_pod=multi, opts=opts)
+
+    t0 = time.time()
+    with mesh:
+        with use_rules(rules, mesh):
+            cfg, jitted, args = build(arch, shape, mesh, rules, opts)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            coll = collective_bytes(compiled.as_text())
+
+    n_dev = mesh.devices.size
+    from repro.launch.analysis import analytic_costs, roofline_terms
+    costs = analytic_costs(cfg, meta["kind"], meta["seq"], meta["batch"],
+                           kv_dtype_bytes=1 if "kv_int8" in opts else 2,
+                           window_cache="window_cache" in opts)
+    coll_total = sum(v["bytes"] for v in coll.values())
+    terms = roofline_terms(costs, coll_total, n_dev)
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "devices": int(n_dev),
+        "mode": mode, "opts": sorted(opts),
+        "params": param_count(T.model_decls(cfg)),
+        "padded_heads": cfg.num_heads, "orig_heads": cfg.orig_num_heads or cfg.num_heads,
+        "padded_kv": cfg.num_kv_heads, "orig_kv": cfg.orig_num_kv_heads or cfg.num_kv_heads,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "collectives": coll,
+        "analytic": {
+            "flops_global": costs.flops,
+            "hbm_bytes_global": costs.hbm_bytes,
+            "model_flops": costs.model_flops,
+            "kv_cache_bytes_global": costs.kv_cache_bytes,
+        },
+        "roofline": terms,
+    }
+    os.makedirs(outdir, exist_ok=True)
+    tag = ("__" + "+".join(sorted(opts))) if opts else ""
+    path = os.path.join(outdir, f"{arch}__{shape}__{mesh_kind}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"[dryrun] {arch} x {shape} x {mesh_kind}{tag}: "
+          f"compile={t_compile:.1f}s flops={result['flops']:.3e} "
+          f"colls={ {k: v['count'] for k, v in coll.items()} }")
+    print(f"  memory: { {k: v for k, v in result['memory'].items()} }")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opts", default="",
+                    help="comma list: moe_data,seq_par,act_model,kv_int8,window_cache")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for a, s in runnable_pairs():
+            print(a, s)
+        return
+    opts = frozenset(o for o in args.opts.split(",") if o)
+    run_one(args.arch, args.shape, args.mesh, args.out, opts)
+
+
+if __name__ == "__main__":
+    main()

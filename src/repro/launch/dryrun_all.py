@@ -1,0 +1,51 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Sweep every runnable (arch x shape x mesh) dry-run in ONE process
+(device count is fixed by the env var above). Skips pairs whose JSON
+already exists, so the sweep is resumable.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import time
+import traceback
+
+from repro.launch.dryrun import run_one, runnable_pairs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for mesh in meshes:
+        for arch, shape in runnable_pairs():
+            if args.only_arch and arch != args.only_arch:
+                continue
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh}.json")
+            if os.path.exists(path):
+                continue
+            t0 = time.time()
+            try:
+                run_one(arch, shape, mesh, args.out)
+            except Exception as e:  # record and continue
+                failures.append((arch, shape, mesh, repr(e)))
+                print(f"[FAIL] {arch} x {shape} x {mesh}: {e}")
+                traceback.print_exc()
+            print(f"  ({time.time()-t0:.0f}s)", flush=True)
+    if failures:
+        with open(os.path.join(args.out, "FAILURES.json"), "w") as f:
+            json.dump(failures, f, indent=1)
+        print(f"{len(failures)} failures")
+    else:
+        print("ALL PASS")
+
+
+if __name__ == "__main__":
+    main()

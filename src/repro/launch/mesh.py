@@ -1,0 +1,73 @@
+"""Production mesh + logical-axis rule construction.
+
+Target: TPU v5e. Single pod = 16x16 = 256 chips (data, model); multi-pod =
+2 x 16 x 16 = 512 chips (pod, data, model). Function (not module constant)
+so importing never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(mode: str, *, multi_pod: bool = False,
+               opts: frozenset | set = frozenset()) -> dict:
+    """Logical-axis -> mesh-axis rules per execution mode.
+
+    mode: 'train' | 'serve' | 'long_ctx'
+    opts (hillclimb levers, EXPERIMENTS.md §Perf):
+      'moe_data'  — shard MoE dispatch/expert tensors' group dim over data
+                    (baseline replicates them -> per-layer all-gather)
+      'seq_par'   — sequence parallelism for prefill: activations' seq dim
+                    over the model axis (attention gathers the small GQA KV)
+      'act_model' — shard saved train activations' d_model over model axis
+    """
+    data = ("pod", "data") if multi_pod else ("data",)
+    base = {
+        "batch": data,
+        "seq": None,
+        "embed": None,
+        "embed_act": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": None,
+        "expert_mlp": "model",
+        "vocab": "model",
+        "conv": None,
+        "state": None,
+        "inner": "model",
+        "cache_seq": None,
+        "layers": None,
+        "moe_group": None,
+    }
+    if mode == "train":
+        # FSDP(ZeRO-3-style): params sharded along d_model over the data axis
+        base["embed"] = data if multi_pod else "data"
+    elif mode == "long_ctx":
+        # batch=1: context parallelism — KV cache seq dim over the data axis
+        base["batch"] = None
+        base["cache_seq"] = data if multi_pod else "data"
+    elif mode != "serve":
+        raise ValueError(mode)
+    if "moe_data" in opts:
+        base["moe_group"] = data if multi_pod else "data"
+    if "seq_par" in opts:
+        base["seq"] = "model"
+    if "seq_par_repl" in opts:
+        # small-model long-prefill recipe: replicate weights (fits HBM),
+        # use the model axis purely for sequence parallelism -> MLP fully
+        # local; attention all-gathers only the small GQA KV
+        base["seq"] = "model"
+        for ax in ("heads", "kv_heads", "mlp", "vocab", "embed", "inner",
+                   "expert_mlp"):
+            base[ax] = None
+    if "act_model" in opts:
+        base["embed_act"] = "model"
+    return base

@@ -1,0 +1,92 @@
+"""Serving launcher: run the TCM-Serve engine on a workload.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-vl-2b \
+      --policy tcm --mix MH --rate 2.0 --num-requests 200 --executor sim
+
+Executors:
+  sim  — cost model derived from the FULL assigned architecture (A100-class
+         coefficients); workload-scale scheduler experiments.
+  real — the actual reduced JAX model on CPU (proves the engine end to end).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, get_reduced
+from repro.core.classifier import NaiveClassifier, SmartClassifier
+from repro.core.estimator import ImpactEstimator
+from repro.core.profiler import WorkloadProfiler
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import ModelExecutor, SimExecutor, \
+    cost_model_for_arch, make_cost_model
+from repro.serving.metrics import fmt_table, goodput, summarize
+from repro.serving.workload import WorkloadConfig, generate, \
+    profiling_workload
+
+
+def build_stack(arch: str, executor_kind: str = "sim", *,
+                naive_classifier: bool = False, model_preset: str | None = None,
+                kv_pages: int | None = None, token_budget: int = 512,
+                slo_scale: float = 5.0):
+    """(engine-factory, executor, classifier) for one model."""
+    if executor_kind == "sim":
+        cm = (make_cost_model(model_preset) if model_preset
+              else cost_model_for_arch(get_config(arch)))
+        executor = SimExecutor(cm)
+        prof_reqs = profiling_workload()
+    else:
+        executor = ModelExecutor(get_reduced(arch), max_slots=16, max_len=256)
+        prof_reqs = profiling_workload(n_per_modality=8)
+    profile = WorkloadProfiler(executor, arch).build(prof_reqs)
+    est = ImpactEstimator.train(profile)
+    classifier = (NaiveClassifier(est) if naive_classifier
+                  else SmartClassifier.train(est, profile))
+    cfg_kwargs = dict(token_budget=token_budget, slo_scale=slo_scale)
+    if kv_pages is not None:
+        cfg_kwargs["kv_pages"] = kv_pages
+    engine_cfg = EngineConfig(**cfg_kwargs)
+    return executor, classifier, engine_cfg, profile, est
+
+
+def serve(arch: str, policy: str, workload: WorkloadConfig, *,
+          executor_kind: str = "sim", naive_classifier: bool = False,
+          model_preset: str | None = None, kv_pages: int | None = None,
+          token_budget: int = 512, slo_scale: float = 5.0):
+    executor, classifier, engine_cfg, _, _ = build_stack(
+        arch, executor_kind, naive_classifier=naive_classifier,
+        model_preset=model_preset, kv_pages=kv_pages,
+        token_budget=token_budget, slo_scale=slo_scale)
+    engine = Engine(make_policy(policy), executor, classifier, engine_cfg)
+    reqs = generate(workload)
+    done = engine.run(reqs)
+    return done, engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-vl-2b")
+    ap.add_argument("--policy", default="tcm",
+                    choices=["fcfs", "edf", "static", "naive-aging", "tcm"])
+    ap.add_argument("--mix", default="MH", choices=["T0", "ML", "MH"])
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--num-requests", type=int, default=200)
+    ap.add_argument("--executor", default="sim", choices=["sim", "real"])
+    ap.add_argument("--naive-classifier", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    wl = WorkloadConfig(mix=args.mix, rate=args.rate,
+                        num_requests=args.num_requests, seed=args.seed)
+    done, engine = serve(args.arch, args.policy, wl,
+                         executor_kind=args.executor,
+                         naive_classifier=args.naive_classifier)
+    s = summarize(done)
+    print(fmt_table(s, f"{args.arch} | {args.policy} | {args.mix} "
+                       f"@ {args.rate} rps ({args.executor})"))
+    print(f"goodput: {goodput(done):.3f} req/s   engine iterations: "
+          f"{engine.iterations}   simulated time: {engine.now:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

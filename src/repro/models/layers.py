@@ -1,0 +1,241 @@
+"""Core transformer layers: norms, attention (GQA + sliding window + caches),
+dense MLP, and capacity-based MoE. Pure-functional: params are dict trees
+produced from ParamDecl declarations in transformer.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .rope import apply_rope
+from .sharding import shard_act
+
+NEG_INF = -1e30
+
+# flip on for TPU deployments (or tests): route full-context attention
+# through the Pallas flash kernel instead of the jnp path
+USE_FLASH_KERNEL = False
+
+
+def set_flash_kernel(enabled: bool) -> None:
+    global USE_FLASH_KERNEL
+    USE_FLASH_KERNEL = enabled
+
+
+def quant_kv(x):
+    """Symmetric per-(token, head) int8 quantization: (q8, scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _maybe_dequant(x, compute_dtype, scale=None):
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.float32) * scale).astype(compute_dtype)
+    return x.astype(compute_dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def _softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def qkv_proj(x, p, cfg: ModelConfig):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def causal_mask(q_start, q_len: int, kv_len: int, window: int = 0):
+    """mask (q_len, kv_len): query i (global pos q_start+i) may attend kv j."""
+    qpos = q_start + jnp.arange(q_len)[:, None]
+    kpos = jnp.arange(kv_len)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def mha(q, k, v, mask, *, softcap: float = 0.0):
+    """q (B,Tq,H,hd), k/v (B,Tk,KV,hd), mask broadcastable to (B,H,Tq,Tk).
+
+    GQA is computed grouped (no materialized kv-head repeat): K/V stay at
+    their stored width, so any cross-device gather of K/V moves KV heads,
+    not H (see EXPERIMENTS §Perf, qwen2-vl iteration)."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    if KV == H:
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+        logits = _softcap(logits / math.sqrt(hd), softcap)
+        logits = jnp.where(mask, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, hd)
+    logits = jnp.einsum("bqcgd,bkcd->bcgqk", qg, k).astype(jnp.float32)
+    logits = _softcap(logits / math.sqrt(hd), softcap)
+    logits = jnp.where(mask, logits, NEG_INF)  # (..,Tq,Tk) broadcasts
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bcgqk,bkcd->bqcgd", w, v)
+    return out.reshape(B, Tq, H, hd)
+
+
+def attention_block(x, p, cfg: ModelConfig, *, positions, q_start=0,
+                    window: int = 0, cache=None, kv_override=None,
+                    is_causal: bool = True):
+    """Full attention sub-block (norm handled by caller).
+
+    cache: None (train / full prefill) or dict {k,v: (B,Smax,KV,hd), idx}
+    for incremental prefill/decode. Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    q, k, v = qkv_proj(x, p, cfg)
+    if kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_style)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_style)
+    q = shard_act(q, "batch", "seq", "heads", None)
+    new_cache = None
+    if cache is not None:
+        # write current k/v at [idx, idx+S), attend over the whole buffer.
+        # int8 caches (beyond-paper serving optimization, EXPERIMENTS §Perf)
+        # use symmetric per-(token, head) quantization with stored scales.
+        idx = cache["idx"]
+        new_cache = {"idx": idx + S}
+        ks = vs = None
+        if cache["k"].dtype == jnp.int8:
+            k_st, k_sc = quant_kv(k)
+            v_st, v_sc = quant_kv(v)
+            new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], k_sc, (0, idx, 0, 0))
+            new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], v_sc, (0, idx, 0, 0))
+            ks, vs = new_cache["k_scale"], new_cache["v_scale"]
+        else:
+            k_st = k.astype(cache["k"].dtype)
+            v_st = v.astype(cache["v"].dtype)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k_st, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v_st, (0, idx, 0, 0))
+        new_cache["k"], new_cache["v"] = ck, cv
+        Tk = ck.shape[1]
+        mask = causal_mask(idx, S, Tk, window)
+        # entries beyond idx+S are unwritten -> masked off by causality
+        out = mha(q, _maybe_dequant(ck, q.dtype, ks),
+                  _maybe_dequant(cv, q.dtype, vs),
+                  mask[None, None], softcap=cfg.logit_softcap)
+    elif kv_override is not None:
+        ck, cv = kv_override  # cross attention (whisper decoder)
+        Tk = ck.shape[1]
+        mask = jnp.ones((S, Tk), dtype=bool)
+        out = mha(q, ck.astype(q.dtype), cv.astype(q.dtype), mask[None, None],
+                  softcap=cfg.logit_softcap)
+    else:
+        if USE_FLASH_KERNEL and is_causal:
+            # Pallas chunked-prefill flash kernel (interpret-mode on CPU,
+            # native on TPU); oracle-equivalence in tests/test_optimizations
+            from repro.kernels import ops as kops
+            out = kops.prefill_attention(q, k, v, q_start=q_start,
+                                         window=window,
+                                         softcap=cfg.logit_softcap)
+        else:
+            if is_causal:
+                mask = causal_mask(q_start, S, S, window)
+            else:
+                mask = jnp.ones((S, S), dtype=bool)
+            out = mha(q, k, v, mask[None, None], softcap=cfg.logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    # barrier pins the TP all-reduce to bf16 here; without it XLA hoists the
+    # reduce past the f32 norm upcast and moves 2x the bytes (§Perf iter 3)
+    out = jax.lax.optimization_barrier(out)
+    return shard_act(out, "batch", "seq", "embed_act"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(x, p):
+    """SwiGLU MLP."""
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wi"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["wg"])
+    h = shard_act(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def moe_block(x, p, cfg: ModelConfig, *, group_size: int = 512):
+    """Capacity-based top-k MoE with group-chunked einsum dispatch.
+
+    Dispatch/combine are one-hot einsums (Switch-style, MXU-friendly); the
+    sequence is chunked into groups so dispatch cost stays linear in S.
+    Returns (out, aux_loss).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    G = min(group_size, S)
+    # pad S to a multiple of G
+    pad = (-S) % G
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    ng = x.shape[1] // G
+    xg = x.reshape(B * ng, G, D)
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(xg.dtype))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(gates, K)                      # (g,G,K)
+    topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)
+
+    C = max(1, int(math.ceil(G * K / E * cfg.capacity_factor)))
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.float32)           # (g,G,K,E)
+    ohf = oh.reshape(-1, G * K, E)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                        # position within expert
+    pos_sel = jnp.einsum("gte,gte->gt", pos, ohf)
+    keep = (pos_sel < C).astype(jnp.float32)
+    disp = ohf * keep[..., None]                               # (g,G*K,E)
+    pos_oh = jax.nn.one_hot(pos_sel, C, dtype=jnp.float32)     # (g,G*K,C)
+    dispatch = jnp.einsum("gte,gtc->gtec", disp, pos_oh).reshape(-1, G, K, E, C).sum(2)
+    wexp = (oh * topw[..., None]).sum(2)                       # (g,G,E)
+    combine = dispatch * wexp[..., None]
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg.astype(jnp.float32), dispatch)
+    # 'moe_group' maps to the data axis under the moe_data optimization
+    # (EXPERIMENTS §Perf): keeps the dispatch tensor batch-sharded instead of
+    # replicated, eliminating the per-layer all-gather.
+    xe = shard_act(xe.astype(x.dtype), "moe_group", "experts", None, "embed_act")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wi"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, p["wg"])
+    h = shard_act(h, "moe_group", "experts", None, "expert_mlp")
+    eo = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    # combine in compute dtype: halves the TP all-reduce volume vs f32
+    # (EXPERIMENTS §Perf iter 2); gates stay f32 upstream for routing quality
+    y = jnp.einsum("gecd,gsec->gsd", eo, combine.astype(eo.dtype))
+    y = jax.lax.optimization_barrier(y.astype(x.dtype))
+    y = y.reshape(B, S + pad, D)[:, :S]
+
+    # Switch aux load-balance loss
+    me = oh[..., 0, :] if K == 1 else oh.mean(2)
+    density = me.mean(1)                                       # (g,E)
+    density_proxy = gates.mean(1)
+    aux = (density * density_proxy).sum(-1).mean() * (E ** 2) / (E * 1.0)
+    return y, aux.astype(jnp.float32)

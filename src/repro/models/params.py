@@ -1,0 +1,108 @@
+"""Parameter declaration system.
+
+Models declare parameters as trees of :class:`ParamDecl` — shape + logical
+axis names + initializer. From one declaration tree we derive:
+
+  * materialized parameters (``init_params``),
+  * ``jax.ShapeDtypeStruct`` stand-ins for dry-run lowering (``abstract_params``),
+  * ``PartitionSpec`` trees via logical-axis rules (``param_pspecs``).
+
+Keeping a single source of truth for shapes and sharding is what lets the
+multi-pod dry-run cover every architecture without per-arch sharding code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    """Declaration of a single parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | fill
+    scale: float | None = None  # stddev; default fan-in
+    dtype: Any = jnp.float32
+    fill: float = 0.0  # used when init == "fill"
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} mismatch")
+
+
+def decl(shape, axes, init="normal", scale=None, dtype=jnp.float32,
+         fill=0.0) -> ParamDecl:
+    return ParamDecl(tuple(int(s) for s in shape), tuple(axes), init, scale,
+                     dtype, fill)
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def tree_map_decls(fn: Callable[[ParamDecl], Any], decls):
+    return jax.tree.map(fn, decls, is_leaf=_is_decl)
+
+
+def init_params(decls, key: jax.Array, dtype=None):
+    """Materialize a declaration tree into actual arrays."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = dtype or d.dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        elif d.init == "fill":
+            out.append(jnp.full(d.shape, d.fill, dt))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(decls, dtype=None):
+    """ShapeDtypeStruct tree for .lower() — no allocation."""
+    return tree_map_decls(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype or d.dtype), decls
+    )
+
+
+def param_count(decls) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(decls, is_leaf=_is_decl))
+
+
+def param_bytes(decls, dtype_bytes=2) -> int:
+    return param_count(decls) * dtype_bytes
+
+
+def logical_to_pspec(axes: tuple[str | None, ...], rules: dict[str, Any]) -> PartitionSpec:
+    """Map logical axis names to mesh axes via rules (MaxText-style)."""
+    entries = []
+    used: set[str] = set()
+    for name in axes:
+        mesh_ax = rules.get(name) if name is not None else None
+        # one mesh axis may only appear once in a PartitionSpec
+        if mesh_ax is not None:
+            flat = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+            if any(m in used for m in flat):
+                mesh_ax = None
+            else:
+                used.update(flat)
+        entries.append(mesh_ax)
+    return PartitionSpec(*entries)
+
+
+def param_pspecs(decls, rules: dict[str, Any]):
+    return tree_map_decls(lambda d: logical_to_pspec(d.axes, rules), decls)

@@ -1,0 +1,72 @@
+"""Rotary position embedding variants.
+
+llama  — standard RoPE over the full head dim (deepseek, gemma, qwen, grok...)
+half   — rotary over the first half of the head dim (ChatGLM3 "2d" RoPE)
+mrope  — multimodal 3-section RoPE (temporal/height/width) from Qwen2-VL
+none   — no rotary (whisper uses learned absolute positions)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def _angles(positions, dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, dim//2)."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply(x, cos, sin):
+    # x: (B,S,H,D); cos/sin: (B,S,Dh) with Dh = D//2
+    cos = jnp.concatenate([cos, cos], axis=-1)[:, :, None, :]
+    sin = jnp.concatenate([sin, sin], axis=-1)[:, :, None, :]
+    return (x.astype(jnp.float32) * cos + _rotate_half(x.astype(jnp.float32)) * sin).astype(x.dtype)
+
+
+def apply_rope(x, positions, theta: float = 10000.0, style: str = "llama",
+               mrope_sections=(2, 3, 3)):
+    """Apply rotary embedding.
+
+    x: (B, S, H, D). positions: (B, S) int32, or (B, S, 3) for mrope.
+    mrope_sections: relative weights of the t/h/w sections (scaled to D//2).
+    """
+    if style == "none":
+        return x
+    D = x.shape[-1]
+    if style == "llama":
+        cos, sin = _angles(positions, D, theta)
+        return _apply(x, cos, sin)
+    if style == "half":
+        # rotary on the first half of the head dim only (ChatGLM)
+        d2 = D // 2
+        xr, xp = x[..., :d2], x[..., d2:]
+        cos, sin = _angles(positions, d2, theta)
+        return jnp.concatenate([_apply(xr, cos, sin), xp], axis=-1)
+    if style == "mrope":
+        # positions (B,S,3): temporal, height, width streams; each section of
+        # the frequency spectrum takes its angles from one stream.
+        if positions.ndim == 2:
+            positions = jnp.repeat(positions[..., None], 3, axis=-1)
+        half = D // 2
+        total = sum(mrope_sections)
+        sizes = [half * s // total for s in mrope_sections]
+        sizes[-1] = half - sum(sizes[:-1])
+        cos_full, sin_full = _angles(
+            jnp.moveaxis(positions, -1, 0), D, theta
+        )  # (3, B, S, half)
+        parts_c, parts_s = [], []
+        off = 0
+        for sec, sz in enumerate(sizes):
+            parts_c.append(cos_full[sec, ..., off:off + sz])
+            parts_s.append(sin_full[sec, ..., off:off + sz])
+            off += sz
+        cos = jnp.concatenate(parts_c, axis=-1)
+        sin = jnp.concatenate(parts_s, axis=-1)
+        return _apply(x, cos, sin)
+    raise ValueError(f"unknown rope style {style!r}")

@@ -1,0 +1,88 @@
+"""Logical-axis sharding rules + activation sharding context.
+
+Rules map *logical* axis names (used in ParamDecls and activation
+annotations) to physical mesh axis names. The dry-run launcher installs a
+rule set + mesh via :func:`use_rules`; on single-device CPU (tests, smoke
+runs) no rules are installed and every annotation is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec
+
+from .params import logical_to_pspec
+
+# Baseline rule sets -------------------------------------------------------
+
+# Training: batch over data(+pod), TP over model, FSDP(ZeRO-3-ish) of params
+# over data on the embed dim.
+TRAIN_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",          # FSDP shard of params along d_model
+    "embed_act": None,         # activations' d_model dim
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": None,
+    "expert_mlp": "model",
+    "vocab": "model",
+    "conv": None,
+    "state": None,
+    "inner": "model",          # mamba/xlstm inner dim
+}
+
+# Serving (decode/prefill): no optimizer, params TP over model, replicated
+# over data; batch over (pod, data).
+SERVE_RULES: dict[str, Any] = {**TRAIN_RULES, "embed": None}
+
+# Long-context decode, batch=1: KV-cache sequence dim context-parallel over
+# data; batch replicated.
+LONG_CTX_RULES: dict[str, Any] = {
+    **SERVE_RULES,
+    "batch": None,
+    "cache_seq": "data",
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: dict[str, Any] | None = None
+        self.mesh = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict[str, Any], mesh):
+    prev = (_CTX.rules, _CTX.mesh)
+    _CTX.rules, _CTX.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev
+
+
+def current_rules() -> dict[str, Any] | None:
+    return _CTX.rules
+
+
+def shard_act(x, *axes: str | None):
+    """Constrain activation sharding by logical axes; no-op without rules."""
+    if _CTX.rules is None or _CTX.mesh is None:
+        return x
+    spec = logical_to_pspec(tuple(axes), _CTX.rules)
+    ns = jax.sharding.NamedSharding(_CTX.mesh, spec)
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def act_pspec(*axes: str | None) -> PartitionSpec:
+    if _CTX.rules is None:
+        return PartitionSpec()
+    return logical_to_pspec(tuple(axes), _CTX.rules)

@@ -1,0 +1,110 @@
+"""Mamba selective-SSM block (Jamba's recurrent layer), TPU-adapted.
+
+The CUDA selective-scan kernel is replaced by a *chunked* linear-recurrence:
+an outer ``lax.scan`` over sequence chunks carrying the (B, DI, N) state and
+an inner ``associative_scan`` within each chunk. This keeps the materialized
+state tensor at (B, Q, DI, N) for chunk size Q instead of (B, S, DI, N) —
+the TPU-native equivalent of the paper's GPU kernel blocking (see DESIGN.md
+hardware-adaptation notes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import shard_act
+
+
+def _scan_chunk(a, b, h0):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t within a chunk.
+
+    a, b: (B, Q, DI, N); h0: (B, DI, N). Returns (h_all (B,Q,DI,N), h_last).
+    """
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = a_c * h0[:, None] + b_c
+    return h_all, h_all[:, -1]
+
+
+def mamba_block(x, p, cfg: ModelConfig, *, cache=None, chunk: int = 256):
+    """x (B,S,D) -> (y (B,S,D), new_cache).
+
+    cache (decode): {"conv": (B, d_conv-1, DI), "ssm": (B, DI, N)}.
+    """
+    B, S, D = x.shape
+    DI, N, KC = cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])  # (B,S,2*DI)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard_act(xi, "batch", "seq", "inner")
+
+    # causal depthwise conv, kernel KC
+    w = p["conv_w"]  # (KC, DI)
+    if cache is not None:
+        prev = cache["conv"].astype(xi.dtype)  # (B, KC-1, DI)
+        xpad = jnp.concatenate([prev, xi], axis=1)
+        new_conv = xpad[:, -(KC - 1):]
+    else:
+        xpad = jnp.pad(xi, ((0, 0), (KC - 1, 0), (0, 0)))
+        new_conv = xpad[:, -(KC - 1):]
+    xc = sum(xpad[:, i:i + S] * w[i] for i in range(KC)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    # SSM parameters (input-dependent)
+    dt = jax.nn.softplus(jnp.einsum("bsi,ir->bsr", xc, p["dt_down"]) @ p["dt_up"]
+                         + p["dt_bias"])                        # (B,S,DI)
+    Bm = jnp.einsum("bsi,in->bsn", xc, p["wB"])                  # (B,S,N)
+    Cm = jnp.einsum("bsi,in->bsn", xc, p["wC"])                  # (B,S,N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (DI,N)
+
+    dt32, xc32 = dt.astype(jnp.float32), xc.astype(jnp.float32)
+    h0 = jnp.zeros((B, DI, N), jnp.float32) if cache is None else cache["ssm"].astype(jnp.float32)
+
+    def chunk_terms(dt_c, B_c, x_c):
+        a = jnp.exp(dt_c[..., None] * A)                         # (B,Q,DI,N)
+        b = (dt_c * x_c)[..., None] * B_c[:, :, None, :].astype(jnp.float32)
+        return a, b
+
+    if S == 1:  # decode fast path
+        a, b = chunk_terms(dt32, Bm, xc32)
+        h = a[:, 0] * h0 + b[:, 0]
+        y = jnp.einsum("bin,bn->bi", h, Cm[:, 0].astype(jnp.float32))[:, None]
+        new_ssm = h
+    else:
+        Q = min(chunk, S)
+        pad = (-S) % Q
+        if pad:
+            dt32 = jnp.pad(dt32, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            xc32_p = jnp.pad(xc32, ((0, 0), (0, pad), (0, 0)))
+        else:
+            Bm_p, xc32_p = Bm, xc32
+        nq = dt32.shape[1] // Q
+
+        def outer(h, inputs):
+            dt_c, B_c, x_c = inputs
+            a, b = chunk_terms(dt_c, B_c, x_c)
+            h_all, h_last = _scan_chunk(a, b, h)
+            return h_last, h_all
+
+        xs = (dt32.reshape(B, nq, Q, DI).swapaxes(0, 1),
+              Bm_p.reshape(B, nq, Q, N).swapaxes(0, 1),
+              xc32_p.reshape(B, nq, Q, DI).swapaxes(0, 1))
+        h_last, h_seq = jax.lax.scan(outer, h0, xs)
+        h_seq = h_seq.swapaxes(0, 1).reshape(B, nq * Q, DI, N)[:, :S]
+        y = jnp.einsum("bsin,bsn->bsi", h_seq, Cm.astype(jnp.float32))
+        new_ssm = h_last
+
+    y = (y + xc32 * p["D_skip"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": new_ssm}
+    else:
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    return shard_act(out, "batch", "seq", "embed_act"), new_cache

@@ -1,0 +1,491 @@
+"""Unified multi-family model: declaration, forward (train / prefill /
+decode), and cache construction.
+
+Layer stacking: the decoder pattern is decomposed into (period, repeats)
+stages; per stage, weights are stacked on a leading ``layers`` dim and the
+period body runs under ``jax.lax.scan``. The per-layer KV/SSM cache is
+scanned as xs/ys. This keeps HLO size independent of depth — a requirement
+for compiling 512-way SPMD programs for 80+ (arch x shape x mesh) combos on
+one CPU core.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import (ATTN, ATTN_L, ATTN_MOE, DEC_ATTN, ENC_ATTN, MAMBA,
+                     MAMBA_MOE, MLSTM, MOE_BLOCKS, SLSTM, ModelConfig)
+from .params import ParamDecl, decl, tree_map_decls
+from .sharding import shard_act
+from .ssm import mamba_block
+from .xlstm import mlstm_block, slstm_block
+
+
+def layer_norm(x, w, b, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+def _norm(x, p, cfg: ModelConfig, key: str):
+    if cfg.norm_style() == "layernorm":
+        return layer_norm(x, p[key], p[key + "_b"], cfg.norm_eps)
+    return L.rms_norm(x, p[key], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+def _attn_decls(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    d = {
+        "wq": decl((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": decl((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": decl((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": decl((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        d.update({
+            "bq": decl((H, hd), ("heads", "head_dim"), init="zeros"),
+            "bk": decl((KV, hd), ("kv_heads", "head_dim"), init="zeros"),
+            "bv": decl((KV, hd), ("kv_heads", "head_dim"), init="zeros"),
+        })
+    return d
+
+
+def _norm_decl(cfg: ModelConfig, name: str) -> dict:
+    d = {name: decl((cfg.d_model,), ("embed",),
+                    init="zeros" if cfg.norm_style() == "rmsnorm" else "ones")}
+    if cfg.norm_style() == "layernorm":
+        d[name + "_b"] = decl((cfg.d_model,), ("embed",), init="zeros")
+    return d
+
+
+def _mlp_decls(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.is_encoder_decoder:  # whisper: 2-matrix GELU MLP
+        return {"wi": decl((D, F), ("embed", "mlp")),
+                "wo": decl((F, D), ("mlp", "embed"))}
+    return {"wi": decl((D, F), ("embed", "mlp")),
+            "wg": decl((D, F), ("embed", "mlp")),
+            "wo": decl((F, D), ("mlp", "embed"))}
+
+
+def _moe_decls(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": decl((D, E), ("embed", None), scale=0.02),
+        "wi": decl((E, D, F), ("experts", "embed", "expert_mlp")),
+        "wg": decl((E, D, F), ("experts", "embed", "expert_mlp")),
+        "wo": decl((E, F, D), ("experts", "expert_mlp", "embed")),
+    }
+
+
+def _mamba_decls(cfg: ModelConfig) -> dict:
+    D, DI, N, KC = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    R = max(16, math.ceil(D / 16))
+    return {
+        "in_proj": decl((D, 2 * DI), ("embed", "inner")),
+        "conv_w": decl((KC, DI), (None, "inner"), scale=0.5),
+        "conv_b": decl((DI,), ("inner",), init="zeros"),
+        "dt_down": decl((DI, R), ("inner", None)),
+        "dt_up": decl((R, DI), (None, "inner")),
+        "dt_bias": decl((DI,), ("inner",), init="zeros"),
+        "wB": decl((DI, N), ("inner", "state")),
+        "wC": decl((DI, N), ("inner", "state")),
+        "A_log": decl((DI, N), ("inner", "state"), init="zeros"),
+        "D_skip": decl((DI,), ("inner",), init="ones"),
+        "out_proj": decl((DI, D), ("inner", "embed")),
+    }
+
+
+def _mlstm_decls(cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.num_heads
+    DI = int(cfg.xlstm_proj_factor * D)
+    return {
+        "up_proj": decl((D, 2 * DI), ("embed", "inner")),
+        "wq": decl((DI, DI), ("inner", None)),
+        "bq": decl((DI,), (None,), init="zeros"),
+        "wk": decl((DI, DI), ("inner", None)),
+        "bk": decl((DI,), (None,), init="zeros"),
+        "wv": decl((DI, DI), ("inner", None)),
+        "bv": decl((DI,), (None,), init="zeros"),
+        "wi_g": decl((DI, H), ("inner", None), scale=0.02),
+        "bi_g": decl((H,), (None,), init="zeros"),
+        "wf_g": decl((DI, H), ("inner", None), scale=0.02),
+        "bf_g": decl((H,), (None,), init="ones"),
+        "down_proj": decl((DI, D), ("inner", "embed")),
+    }
+
+
+def _slstm_decls(cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.num_heads
+    hd = D // H
+    F = int(4 * D / 3)
+    d = {}
+    for g in ("z", "i", "f", "o"):
+        d["W" + g] = decl((H, hd, hd), ("heads", None, None))
+        d["b" + g] = decl((H, hd), ("heads", None),
+                          init="ones" if g == "f" else "zeros")
+        d["R" + g] = decl((H, hd, hd), ("heads", None, None), scale=0.02)
+    d["ff_up"] = decl((D, F), ("embed", "mlp"))
+    d["ff_gate"] = decl((D, F), ("embed", "mlp"))
+    d["ff_down"] = decl((F, D), ("mlp", "embed"))
+    return d
+
+
+def block_decls(cfg: ModelConfig, bt: str) -> dict:
+    """Namespaced decl tree for one block: {'attn': {...}, 'mlp': {...}, ...}."""
+    d = dict(_norm_decl(cfg, "ln1"))
+    if bt in (ATTN, ATTN_L, ATTN_MOE, ENC_ATTN, DEC_ATTN):
+        d["attn"] = _attn_decls(cfg)
+        d.update(_norm_decl(cfg, "ln2"))
+        if bt == DEC_ATTN:
+            d["cross"] = _attn_decls(cfg, cross=True)
+            d.update(_norm_decl(cfg, "ln_x"))
+        if bt in MOE_BLOCKS:
+            d["moe"] = _moe_decls(cfg)
+        else:
+            d["mlp"] = _mlp_decls(cfg)
+    elif bt in (MAMBA, MAMBA_MOE):
+        d["mamba"] = _mamba_decls(cfg)
+        d.update(_norm_decl(cfg, "ln2"))
+        if bt in MOE_BLOCKS:
+            d["moe"] = _moe_decls(cfg)
+        else:
+            d["mlp"] = _mlp_decls(cfg)
+    elif bt == MLSTM:
+        d["core"] = _mlstm_decls(cfg)
+    elif bt == SLSTM:
+        d["core"] = _slstm_decls(cfg)
+    else:
+        raise ValueError(bt)
+    return d
+
+
+def _stack(d: dict, reps: int) -> dict:
+    return tree_map_decls(
+        lambda p: ParamDecl((reps,) + p.shape, ("layers",) + p.axes, p.init,
+                            p.scale, p.dtype), d)
+
+
+def model_decls(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    out = {
+        "embed": decl((V, D), ("vocab", "embed"), scale=0.02),
+        "stages": [
+            {f"b{i}": _stack(block_decls(cfg, bt), reps)
+             for i, bt in enumerate(period)}
+            for period, reps in cfg.stages()
+        ],
+    }
+    out.update(_norm_decl(cfg, "final_norm"))
+    if not cfg.tie_embeddings:
+        out["lm_head"] = decl((D, V), ("embed", "vocab"), scale=0.02)
+    if cfg.is_encoder_decoder:
+        out["enc_stages"] = [
+            {"b0": _stack(block_decls(cfg, ENC_ATTN), cfg.num_encoder_layers)}
+        ]
+        out.update({k + "_enc": v for k, v in _norm_decl(cfg, "final_norm").items()})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache declarations
+# ---------------------------------------------------------------------------
+
+def cache_decls(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, window_cache: bool = False) -> dict:
+    """Decl tree for the decode/prefill cache (dense JetStream-style layout)."""
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    H = cfg.num_heads
+
+    def attn_cache(bt):
+        S = max_len
+        if window_cache and bt == ATTN_L and cfg.sliding_window > 0:
+            S = min(max_len, cfg.sliding_window)
+        d = {
+            "k": decl((batch, S, KV, hd), ("batch", "cache_seq", "kv_heads", None),
+                      init="zeros", dtype=dtype),
+            "v": decl((batch, S, KV, hd), ("batch", "cache_seq", "kv_heads", None),
+                      init="zeros", dtype=dtype),
+        }
+        if dtype == jnp.int8:  # per-(token, head) quantization scales
+            for s in ("k_scale", "v_scale"):
+                d[s] = decl((batch, S, KV, 1),
+                            ("batch", "cache_seq", "kv_heads", None),
+                            init="ones", dtype=jnp.float32)
+        if bt == DEC_ATTN:
+            cross_dt = jnp.bfloat16 if dtype == jnp.int8 else dtype
+            d["ck"] = decl((batch, cfg.encoder_seq, KV, hd),
+                           ("batch", None, "kv_heads", None), init="zeros",
+                           dtype=cross_dt)
+            d["cv"] = decl((batch, cfg.encoder_seq, KV, hd),
+                           ("batch", None, "kv_heads", None), init="zeros",
+                           dtype=cross_dt)
+        return d
+
+    def block_cache(bt):
+        if bt in (ATTN, ATTN_L, ATTN_MOE, DEC_ATTN):
+            return attn_cache(bt)
+        if bt in (MAMBA, MAMBA_MOE):
+            return {
+                "conv": decl((batch, cfg.mamba_d_conv - 1, cfg.d_inner),
+                             ("batch", None, "inner"), init="zeros", dtype=dtype),
+                "ssm": decl((batch, cfg.d_inner, cfg.mamba_d_state),
+                            ("batch", "inner", "state"), init="zeros",
+                            dtype=jnp.float32),
+            }
+        if bt == MLSTM:
+            DI = int(cfg.xlstm_proj_factor * cfg.d_model)
+            hdi = DI // H
+            return {
+                "C": decl((batch, H, hdi, hdi), ("batch", "heads", None, None),
+                          init="zeros", dtype=jnp.float32),
+                "n": decl((batch, H, hdi), ("batch", "heads", None),
+                          init="zeros", dtype=jnp.float32),
+                "m": decl((batch, H), ("batch", "heads"), init="fill",
+                          fill=-1e30, dtype=jnp.float32),
+            }
+        if bt == SLSTM:
+            hds = cfg.d_model // H
+            return {k: decl((batch, H, hds), ("batch", "heads", None),
+                            init="ones" if k == "n" else "zeros",
+                            dtype=jnp.float32)
+                    for k in ("c", "n", "m", "h")}
+        raise ValueError(bt)
+
+    return {
+        "stages": [
+            {f"b{i}": _stack(block_cache(bt), reps) for i, bt in enumerate(period)}
+            for period, reps in cfg.stages()
+        ],
+        "idx": decl((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _apply_attnish(x, bp, bt, cfg, *, positions, q_start, cache, enc_out, idx):
+    """Attention-family block (incl. MoE MLP and cross-attn). Returns
+    (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(x, bp, cfg, "ln1")
+    window = cfg.window_for(bt)
+    blk_cache = None
+    if cache is not None and bt != ENC_ATTN:
+        blk_cache = {k: cache[k] for k in ("k", "v", "k_scale", "v_scale")
+                     if k in cache}
+        blk_cache["idx"] = idx
+    attn_out, new_kv = L.attention_block(
+        h, bp["attn"], cfg, positions=positions, q_start=q_start, window=window,
+        cache=blk_cache, is_causal=(bt != ENC_ATTN))
+    x = x + attn_out
+    new_cache = dict(cache) if cache is not None else None
+    if new_kv is not None:
+        for k in ("k", "v", "k_scale", "v_scale"):
+            if k in new_kv:
+                new_cache[k] = new_kv[k]
+
+    if bt == DEC_ATTN:
+        h = _norm(x, bp, cfg, "ln_x")
+        cp = bp["cross"]
+        if cache is not None and enc_out is None:
+            kv = (L._maybe_dequant(cache["ck"], x.dtype),
+                  L._maybe_dequant(cache["cv"], x.dtype))  # cached cross kv
+        else:
+            ck = jnp.einsum("btd,dhk->bthk", enc_out, cp["wk"])
+            cv = jnp.einsum("btd,dhk->bthk", enc_out, cp["wv"])
+            kv = (ck, cv)
+            if new_cache is not None:
+                new_cache["ck"] = ck.astype(new_cache["ck"].dtype)
+                new_cache["cv"] = cv.astype(new_cache["cv"].dtype)
+        q = jnp.einsum("bsd,dhk->bshk", h, cp["wq"])
+        Tk = kv[0].shape[1]
+        mask = jnp.ones((h.shape[1], Tk), bool)
+        out = L.mha(q, kv[0].astype(q.dtype), kv[1].astype(q.dtype),
+                    mask[None, None], softcap=0.0)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, cp["wo"])
+
+    h = _norm(x, bp, cfg, "ln2")
+    if bt in MOE_BLOCKS:
+        mlp_out, aux = L.moe_block(h, bp["moe"], cfg)
+    elif cfg.is_encoder_decoder:
+        mp = bp["mlp"]
+        mlp_out = jnp.einsum(
+            "bsf,fd->bsd", jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, mp["wi"])),
+            mp["wo"])
+    else:
+        mlp_out = L.mlp_block(h, bp["mlp"])
+    return x + mlp_out, new_cache, aux
+
+
+def _apply_mambaish(x, bp, bt, cfg, *, cache):
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(x, bp, cfg, "ln1")
+    m_cache = None
+    if cache is not None:
+        m_cache = {"conv": cache["conv"], "ssm": cache["ssm"]}
+    out, new_m = mamba_block(h, bp["mamba"], cfg, cache=m_cache)
+    x = x + out
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_m["conv"].astype(cache["conv"].dtype),
+                     "ssm": new_m["ssm"].astype(cache["ssm"].dtype)}
+    h = _norm(x, bp, cfg, "ln2")
+    if bt in MOE_BLOCKS:
+        mlp_out, aux = L.moe_block(h, bp["moe"], cfg)
+    else:
+        mlp_out = L.mlp_block(h, bp["mlp"])
+    return x + mlp_out, new_cache, aux
+
+
+def apply_block(x, bp, bt, cfg, *, positions, q_start, cache, enc_out, idx):
+    if bt in (ATTN, ATTN_L, ATTN_MOE, ENC_ATTN, DEC_ATTN):
+        return _apply_attnish(x, bp, bt, cfg, positions=positions,
+                              q_start=q_start, cache=cache, enc_out=enc_out,
+                              idx=idx)
+    if bt in (MAMBA, MAMBA_MOE):
+        return _apply_mambaish(x, bp, bt, cfg, cache=cache)
+    if bt == MLSTM:
+        h = _norm(x, bp, cfg, "ln1")
+        out, new_c = mlstm_block(h, bp["core"], cfg, cache=cache)
+        new_cache = None
+        if cache is not None:
+            new_cache = {k: new_c[k].astype(cache[k].dtype) for k in cache}
+        return x + out, new_cache, jnp.zeros((), jnp.float32)
+    if bt == SLSTM:
+        h = _norm(x, bp, cfg, "ln1")
+        out, new_c = slstm_block(h, bp["core"], cfg, cache=cache)
+        new_cache = None
+        if cache is not None:
+            new_cache = {k: new_c[k].astype(cache[k].dtype) for k in cache}
+        return x + out, new_cache, jnp.zeros((), jnp.float32)
+    raise ValueError(bt)
+
+
+def _run_stages(x, stage_params, stage_caches, patternized, cfg, *,
+                positions, q_start, enc_out, idx, remat):
+    """Scan each stage's period body over its repeats."""
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, (period, reps) in enumerate(patternized):
+        sp = stage_params[si]
+        sc = stage_caches[si] if stage_caches is not None else None
+
+        def body(carry, per_layer, period=period):
+            xx, aux = carry
+            lp, lc = per_layer
+            new_lc = {} if lc is not None else None
+            for bi, bt in enumerate(period):
+                blk_c = lc[f"b{bi}"] if lc is not None else None
+                xx, nbc, a = apply_block(
+                    xx, lp[f"b{bi}"], bt, cfg, positions=positions,
+                    q_start=q_start, cache=blk_c, enc_out=enc_out, idx=idx)
+                if new_lc is not None:
+                    new_lc[f"b{bi}"] = nbc
+                aux = aux + a
+            return (xx, aux), new_lc
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        if sc is None:
+            (x, total_aux), _ = jax.lax.scan(
+                lambda c, p, period=period: (body(c, (p, None))[0], None),
+                (x, total_aux), sp)
+            new_caches.append(None)
+        else:
+            (x, total_aux), nc = jax.lax.scan(body, (x, total_aux), (sp, sc))
+            new_caches.append(nc)
+    return x, new_caches, total_aux
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over stub conv-frontend frame embeddings (B,T,D)."""
+    B, T, D = frames.shape
+    pos = jnp.arange(T)
+    x = frames + _sinusoid(T, D).astype(frames.dtype)
+    x, _, _ = _run_stages(
+        x, params["enc_stages"], None, [((ENC_ATTN,), cfg.num_encoder_layers)],
+        cfg, positions=pos[None], q_start=0, enc_out=None, idx=None, remat=False)
+    if cfg.norm_style() == "layernorm":
+        x = layer_norm(x, params["final_norm_enc"], params["final_norm_b_enc"],
+                       cfg.norm_eps)
+    else:
+        x = L.rms_norm(x, params["final_norm_enc"], cfg.norm_eps)
+    return x
+
+
+def _sinusoid(T, D):
+    return _sinusoid_at(jnp.arange(T)[None], D)
+
+
+def _sinusoid_at(positions, D):
+    """positions (B,S) -> (B,S,D) sinusoidal embedding."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)
+    ang = pos / jnp.power(10000.0, dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, positions=None,
+            mm_embeds=None, enc_frames=None, cache=None, q_start=0,
+            remat=False, last_only=False):
+    """Unified forward.
+
+    tokens: (B, S) int32. positions: (B,S) or (B,S,3) for mrope.
+    mm_embeds: (B, N_mm, D) stub patch/frame embeddings (VLM) — replace the
+      first N_mm token embeddings.
+    enc_frames: (B, T_enc, D) stub audio frames (whisper).
+    cache: cache tree from cache_decls (prefill-with-cache / decode), or None.
+    Returns (logits (B,S,V), new_cache_or_None, aux_loss).
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = q_start + jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+    # mixed precision: master params may be f32; compute in cfg.dtype
+    params = jax.tree.map(lambda a: a.astype(cfg.dtype)
+                          if a.dtype == jnp.float32 else a, params)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if mm_embeds is not None:
+        # stub patch/frame embeddings replace the first N_mm token embeds
+        x = jax.lax.dynamic_update_slice(x, mm_embeds.astype(x.dtype), (0, 0, 0))
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoid_at(positions[..., 0] if positions.ndim == 3 else positions,
+                             cfg.d_model).astype(x.dtype)
+    x = shard_act(x, "batch", "seq", "embed_act")
+
+    enc_out = None
+    if cfg.is_encoder_decoder and enc_frames is not None:
+        enc_out = encode(params, cfg, enc_frames.astype(cfg.dtype))
+
+    idx = cache["idx"] if cache is not None else None
+    stage_caches = cache["stages"] if cache is not None else None
+    x, new_stage_caches, aux = _run_stages(
+        x, params["stages"], stage_caches, cfg.stages(), cfg,
+        positions=positions, q_start=q_start, enc_out=enc_out, idx=idx,
+        remat=remat)
+
+    if last_only:
+        x = x[:, -1:]  # serving prefill: lm_head on the final position only
+    if cfg.norm_style() == "layernorm":
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    else:
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = shard_act(logits, "batch", "seq", "vocab")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"stages": new_stage_caches, "idx": idx + S}
+    return logits, new_cache, aux

@@ -1,0 +1,142 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to arXiv:2405.04517 at the block level: exponential gating with
+log-space stabilizer state m, per-head matrix memory C (mLSTM) / scalar
+cell state c with block-diagonal recurrence (sLSTM). Sequence processing
+uses ``lax.scan`` (single While loop in HLO — compile-friendly at 32k+).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import shard_act
+
+
+def _mlstm_step(state, inp, eps=1e-6):
+    """One mLSTM step. state: (C (B,H,d,d), n (B,H,d), m (B,H)).
+    inp: q,k,v (B,H,d), i_g,f_g (B,H) pre-activations."""
+    C, n, m = state
+    q, k, v, ig, fg = inp
+    log_f = -jax.nn.softplus(-fg)          # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, ig)
+    i_act = jnp.exp(ig - m_new)            # stabilized exp gate
+    f_act = jnp.exp(log_f + m - m_new)
+    C = f_act[..., None, None] * C + i_act[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_act[..., None] * n + i_act[..., None] * k
+    h_num = jnp.einsum("bhd,bhde->bhe", q, C)
+    h_den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    h = h_num / jnp.maximum(h_den, jnp.exp(-m_new))[..., None].clip(eps)
+    return (C, n, m_new), h
+
+
+def mlstm_block(x, p, cfg: ModelConfig, *, cache=None):
+    """mLSTM block with up-projection (factor cfg.xlstm_proj_factor).
+
+    x: (B,S,D). cache (decode): {"C": (B,H,d,d), "n": (B,H,d), "m": (B,H)}.
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    DI = int(cfg.xlstm_proj_factor * D)
+    hd = DI // H
+    up = jnp.einsum("bsd,de->bse", x, p["up_proj"])   # (B,S,2*DI)
+    xin, z = jnp.split(up, 2, axis=-1)
+    xin = shard_act(xin, "batch", "seq", "inner")
+
+    def heads(w, b):
+        return (jnp.einsum("bsi,ie->bse", xin, w) + b).reshape(B, S, H, -1)
+
+    q = heads(p["wq"], p["bq"]).astype(jnp.float32)
+    k = heads(p["wk"], p["bk"]).astype(jnp.float32) / jnp.sqrt(float(hd))
+    v = heads(p["wv"], p["bv"]).astype(jnp.float32)
+    ig = (jnp.einsum("bsi,ih->bsh", xin, p["wi_g"]) + p["bi_g"]).astype(jnp.float32)
+    fg = (jnp.einsum("bsi,ih->bsh", xin, p["wf_g"]) + p["bf_g"]).astype(jnp.float32)
+
+    if cache is not None:
+        state0 = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                  cache["m"].astype(jnp.float32))
+    else:
+        state0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                  jnp.zeros((B, H, hd), jnp.float32),
+                  jnp.full((B, H), -1e30, jnp.float32))
+
+    if S == 1:
+        state, h = _mlstm_step(state0, (q[:, 0].reshape(B, H, hd),
+                                        k[:, 0].reshape(B, H, hd),
+                                        v[:, 0].reshape(B, H, hd), ig[:, 0], fg[:, 0]))
+        h = h[:, None]
+    else:
+        xs = (q.swapaxes(0, 1).reshape(S, B, H, hd),
+              k.swapaxes(0, 1).reshape(S, B, H, hd),
+              v.swapaxes(0, 1).reshape(S, B, H, hd),
+              ig.swapaxes(0, 1), fg.swapaxes(0, 1))
+        state, hs = jax.lax.scan(lambda s, i: _mlstm_step(s, i), state0, xs)
+        h = hs.swapaxes(0, 1)                                   # (B,S,H,hd)
+    h = h.reshape(B, S, DI).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", h, p["down_proj"])
+    new_cache = {"C": state[0], "n": state[1], "m": state[2]}
+    return shard_act(out, "batch", "seq", "embed_act"), new_cache
+
+
+def slstm_block(x, p, cfg: ModelConfig, *, cache=None):
+    """sLSTM block: scalar memory with per-head recurrent connections,
+    followed by a gated FFN (factor 4/3, as in the paper)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    xh = x.reshape(B, S, H, hd)
+
+    Rz, Ri, Rf, Ro = p["Rz"], p["Ri"], p["Rf"], p["Ro"]  # (H, hd, hd)
+
+    def gate_x(w, b):
+        return (jnp.einsum("bshd,hde->bshe", xh, w) + b).astype(jnp.float32)
+
+    zx, ix_, fx, ox = (gate_x(p["Wz"], p["bz"]), gate_x(p["Wi"], p["bi"]),
+                       gate_x(p["Wf"], p["bf"]), gate_x(p["Wo"], p["bo"]))
+
+    if cache is not None:
+        c0, n0, m0, h0 = (cache["c"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                          cache["m"].astype(jnp.float32), cache["h"].astype(jnp.float32))
+    else:
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.ones((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H, hd), jnp.float32)
+        h0 = jnp.zeros((B, H, hd), jnp.float32)
+
+    def step(state, inp):
+        c, n, m, h = state
+        zx_t, ix_t, fx_t, ox_t = inp
+
+        def rec(R, hh):
+            return jnp.einsum("bhd,hde->bhe", hh, R.astype(jnp.float32))
+
+        zt = jnp.tanh(zx_t + rec(Rz, h))
+        it = ix_t + rec(Ri, h)
+        ft = fx_t + rec(Rf, h)
+        ot = jax.nn.sigmoid(ox_t + rec(Ro, h))
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_act = jnp.exp(it - m_new)
+        f_act = jnp.exp(log_f + m - m_new)
+        c_new = f_act * c + i_act * zt
+        n_new = f_act * n + i_act
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if S == 1:
+        state, h = step((c0, n0, m0, h0), (zx[:, 0], ix_[:, 0], fx[:, 0], ox[:, 0]))
+        hs = h[:, None]
+    else:
+        xs = tuple(a.swapaxes(0, 1) for a in (zx, ix_, fx, ox))
+        state, hs = jax.lax.scan(step, (c0, n0, m0, h0), xs)
+        hs = hs.swapaxes(0, 1)
+    y = hs.reshape(B, S, D).astype(x.dtype)
+    # gated FFN
+    g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, p["ff_up"]))
+    y = jnp.einsum("bsf,fd->bsd", g * jnp.einsum("bsd,df->bsf", y, p["ff_gate"]),
+                   p["ff_down"])
+    new_cache = {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    return shard_act(y, "batch", "seq", "embed_act"), new_cache

@@ -1,0 +1,244 @@
+"""Continuous-batching serving engine (vLLM-style) with pluggable
+scheduling policy — the substrate TCM-Serve plugs into.
+
+Per iteration (vLLM V1 semantics with chunked prefill):
+  1. ingest arrivals: classify (estimator+classifier), assign SLO, enqueue;
+  2. the policy orders waiting+preempted requests; the engine admits them
+     under the iteration token budget (decode tokens first, then prefill
+     chunks) and the KV page allocator; under memory pressure the policy
+     picks preemption victims (recompute-style eviction, as vLLM);
+  3. the executor runs the batch (sim cost model or real JAX) and the clock
+     advances; a request's preprocess+encode stage runs with its first
+     prefill chunk (paper Fig. 6 TTFT decomposition);
+  4. requests finishing prefill emit their first token that iteration
+     (TTFT); decoding requests emit one token per iteration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.cache.allocator import BlockAllocator
+from repro.core.queues import QueueManager
+from repro.core.scheduler import SchedulerPolicy
+from repro.serving.request import Request, State, VehicleClass
+
+
+@dataclass
+class EngineConfig:
+    token_budget: int = 2048        # chunked-prefill budget per iteration
+    max_num_seqs: int = 64          # max concurrently running requests
+    kv_pages: int = 24576           # KV capacity (pages); ~393k tokens at
+    page_size: int = 16             # 16 tok/page (A100-40GB, 7B-class model)
+    slo_scale: float = 5.0          # SLO = scale x isolated E2E (paper)
+    max_preemptions_per_iter: int = 4
+    # beyond-paper (EXPERIMENTS §Serving-perf): while latency-critical
+    # (motorcycle) requests are decoding, shrink the prefill share of the
+    # iteration so their inter-token latency stays near isolated speed.
+    decode_priority: bool = False
+    decode_priority_frac: float = 0.6
+
+
+@dataclass
+class Engine:
+    policy: SchedulerPolicy
+    executor: object
+    classifier: object
+    config: EngineConfig = field(default_factory=EngineConfig)
+
+    def __post_init__(self):
+        self.allocator = BlockAllocator(self.config.kv_pages,
+                                        self.config.page_size)
+        self.queues = QueueManager()
+        self.now = 0.0
+        self.running: list[Request] = []     # decoding
+        self.prefilling: list[Request] = []  # admitted, chunked prefill
+        self.finished: list[Request] = []
+        self.rejected: list[Request] = []    # admission control
+        self.iterations = 0
+
+    # ------------------------------------------------------------------
+    def _ingest(self, pending: list[Request]) -> list[Request]:
+        """Move arrived requests into the classified waiting queues."""
+        still = []
+        for req in pending:
+            if req.arrival <= self.now:
+                vclass, est_prefill, est_kv = self.classifier.classify(
+                    req.modality.value, req.text_tokens, req.mm_units)
+                req.vclass = vclass
+                req.est_prefill = est_prefill
+                req.est_kv_tokens = est_kv
+                # multimodal preprocess runs async on CPU (vLLM-style):
+                # delays this request's readiness, not the GPU
+                pre = getattr(self.executor, "preprocess_delay",
+                              lambda r: 0.0)(req)
+                req.preprocess_time = pre
+                req.ready_at = req.arrival + pre
+                if req.slo == float("inf"):
+                    req.slo = self.config.slo_scale * \
+                        self.executor.isolated_e2e(req)
+                # admission control: a request whose context can never fit the
+                # total KV capacity is rejected up front (vLLM errors out)
+                need = req.prompt_tokens + req.output_tokens
+                if self.allocator.pages_for_tokens(need) > \
+                        self.allocator.num_pages:
+                    req.state = State.REJECTED
+                    self.rejected.append(req)
+                    continue
+                self.queues.push(req, self.now)
+            else:
+                still.append(req)
+        return still
+
+    # ------------------------------------------------------------------
+    def _try_admit(self, req: Request) -> bool:
+        """Allocate KV pages for the full prompt; preempt strictly
+        lower-priority victims if needed (no preemption cycles)."""
+        tokens = req.prompt_tokens
+        tries = 0
+        while not self.allocator.can_allocate(tokens):
+            victim = self.policy.pick_victim(
+                self.running + self.prefilling, self.now, for_req=req)
+            if victim is None or victim is req or \
+                    tries >= self.config.max_preemptions_per_iter:
+                return False
+            self._preempt(victim)
+            tries += 1
+        self.allocator.allocate(req.rid, tokens)
+        return True
+
+    def _preempt(self, victim: Request) -> None:
+        """Recompute-style eviction: drop KV, back to the waiting queue."""
+        self.allocator.free(victim.rid)
+        if victim in self.running:
+            self.running.remove(victim)
+        if victim in self.prefilling:
+            self.prefilling.remove(victim)
+        if hasattr(self.executor, "release_slot"):
+            self.executor.release_slot(victim)
+        victim.preemptions += 1
+        victim.preempted_at = self.now
+        victim.prefilled = 0
+        victim.state = State.PREEMPTED
+        self.queues.push(victim, self.now)
+
+    # ------------------------------------------------------------------
+    def _plan(self):
+        """Pick this iteration's decode batch + prefill chunks."""
+        budget = self.config.token_budget
+        decode_batch = list(self.running)
+        budget -= len(decode_batch)
+        if self.config.decode_priority and any(
+                r.vclass is VehicleClass.MOTORCYCLE for r in decode_batch):
+            # protect latency-critical inter-token latency: cap the prefill
+            # share while motorcycles are decoding (beyond-paper)
+            budget = min(budget, int(self.config.token_budget *
+                                     self.config.decode_priority_frac))
+
+        prefill_work: list[tuple[Request, int]] = []
+        encode_batch: list[Request] = []
+
+        # one policy-ordered pass over BOTH in-flight prefills and waiting
+        # requests: lets a fresh motorcycle take budget ahead of a truck's
+        # next chunk ("reshaping batches", paper §3.1) while admitted
+        # requests keep their KV pages.
+        candidates = self.policy.order(
+            list(self.prefilling) +
+            [r for r in self.queues.peek_all() if r.ready_at <= self.now],
+            self.now)
+        for req in candidates:
+            if budget <= 0:
+                break
+            admitted = req in self.prefilling
+            if not admitted:
+                if len(self.running) + len(self.prefilling) >= \
+                        self.config.max_num_seqs:
+                    continue
+                if not self._try_admit(req):
+                    continue
+                self.queues.remove(req)
+                if req.preempted_at is not None:
+                    req.preempted_time += self.now - req.preempted_at
+                    req.preempted_at = None
+                req.state = State.PREFILLING
+                self.prefilling.append(req)
+            elif req not in self.prefilling:
+                continue  # got preempted by a later admission this pass
+            if not req.stage_done:
+                encode_batch.append(req)
+                req.stage_done = True
+            chunk = min(budget, req.prompt_tokens - req.prefilled)
+            if chunk > 0:
+                prefill_work.append((req, chunk))
+                budget -= chunk
+        return prefill_work, decode_batch, encode_batch
+
+    # ------------------------------------------------------------------
+    def step(self, pending: list[Request]) -> list[Request]:
+        pending = self._ingest(pending)
+        if not (self.running or self.prefilling or len(self.queues)):
+            if pending:  # idle: jump to next arrival
+                self.now = max(self.now, pending[0].arrival)
+                pending = self._ingest(pending)
+            else:
+                return pending
+
+        prefill_work, decode_batch, encode_batch = self._plan()
+        if not (prefill_work or decode_batch or encode_batch) \
+                and len(self.queues):
+            # everything is waiting on async preprocess: jump ahead
+            nxt = min(r.ready_at for r in self.queues.peek_all())
+            self.now = max(self.now, nxt)
+            prefill_work, decode_batch, encode_batch = self._plan()
+        duration = self.executor.run_iteration(prefill_work, decode_batch,
+                                               encode_batch)
+        self.now += duration
+        self.iterations += 1
+
+        for req, chunk in prefill_work:
+            if req not in self.prefilling:
+                continue  # preempted later in the same planning pass
+            req.prefilled += chunk
+            if req.prefilled >= req.prompt_tokens:
+                req.first_token_time = self.now  # prefill iter emits token 1
+                req.decoded = 1
+                req.state = State.RUNNING
+                self.prefilling.remove(req)
+                self.running.append(req)
+        done = []
+        for req in decode_batch:
+            if req not in self.running:
+                continue  # preempted mid-plan (defensive)
+            req.decoded += 1
+            # grow KV by one token; preempt someone if out of pages
+            try:
+                self.allocator.allocate(req.rid,
+                                        req.prompt_tokens + req.decoded)
+            except Exception:
+                victim = self.policy.pick_victim(
+                    [r for r in self.running + self.prefilling if r is not req],
+                    self.now)
+                if victim is not None:
+                    self._preempt(victim)
+                    self.allocator.allocate(
+                        req.rid, req.prompt_tokens + req.decoded)
+            if req.decoded >= req.output_tokens:
+                done.append(req)
+        for req in done:
+            req.finish_time = self.now
+            req.state = State.FINISHED
+            self.running.remove(req)
+            self.allocator.free(req.rid)
+            if hasattr(self.executor, "release_slot"):
+                self.executor.release_slot(req)
+            self.finished.append(req)
+        return pending
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request], max_iters: int = 2_000_000):
+        pending = sorted(requests, key=lambda r: r.arrival)
+        n = len(pending)
+        it = 0
+        while len(self.finished) + len(self.rejected) < n and it < max_iters:
+            pending = self.step(pending)
+            it += 1
+        return self.finished

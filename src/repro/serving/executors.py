@@ -1,0 +1,234 @@
+"""Execution backends for the serving engine.
+
+SimExecutor — iteration-cost model calibrated to the paper's own
+characterization (Figs. 2 and 6): per-token prefill cost from model FLOPs /
+device throughput, quadratic attention term, per-iteration decode cost,
+modality preprocess/encode stage costs. Used for workload-scale scheduler
+experiments (the scheduler sees the identical engine API either way).
+
+ModelExecutor — runs the real JAX model (reduced config) with the dense
+slot cache; proves the engine end-to-end on CPU and backs the examples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.profiler import ProfileRecord
+
+from .request import Modality, Request
+
+
+@dataclass
+class CostModel:
+    """Analytic A100-class iteration-time model for one MLLM.
+
+    prefill: t = c_base + c_tok * T + c_attn * T^2   (T = chunk tokens;
+    the quadratic term uses chunk x context for chunked prefill)
+    decode:  t = d_base + d_tok * B (+ attention over context)
+    encode:  per-modality preprocess/encode from unit counts.
+    """
+    name: str = "llava-7b"
+    n_params: float = 7e9
+    peak_flops: float = 312e12 * 0.60   # A100 bf16 with realistic MFU
+    c_base: float = 0.004
+    d_base: float = 0.008
+    kv_bytes_per_token: float = 2 * 32 * 1024 * 2  # 2(KV) * L*d_kv * bf16
+    hbm_bw: float = 1.5e12 * 0.8
+    # vision stage (calibrated to paper Fig. 6: image TTFT < 1 s, video 1-10 s)
+    img_preproc_s: float = 0.030
+    img_encode_per_patch: float = 5e-5
+    vid_preproc_per_frame: float = 0.004
+    vid_encode_per_patch: float = 2.5e-5
+
+    def prefill_time(self, chunk_tokens: int, ctx_before: int) -> float:
+        flops = 2.0 * self.n_params * chunk_tokens
+        # attention reads the context KV once per chunk
+        attn = (ctx_before + chunk_tokens / 2) * chunk_tokens * 4e-9 / 50
+        return flops / self.peak_flops + attn
+
+    def decode_time(self, batch: int, ctx_tokens_total: int) -> float:
+        # weights + KV reads are bandwidth-bound at decode
+        weight_read = 2.0 * self.n_params / self.hbm_bw
+        kv_read = ctx_tokens_total * self.kv_bytes_per_token / self.hbm_bw
+        return weight_read + kv_read + 2.0 * self.n_params * batch / self.peak_flops
+
+    def preprocess_time(self, req: Request) -> float:
+        if req.modality == Modality.IMAGE:
+            return self.img_preproc_s
+        if req.modality == Modality.VIDEO:
+            frames = req.mm_units / 196
+            return self.vid_preproc_per_frame * frames
+        return 0.0
+
+    def encode_time(self, req: Request) -> float:
+        if req.modality == Modality.IMAGE:
+            return self.img_encode_per_patch * req.mm_units
+        if req.modality == Modality.VIDEO:
+            return self.vid_encode_per_patch * req.mm_units
+        return 0.0
+
+
+# Paper-table model presets (Table 1) + assigned archs. Coefficients scale
+# with LLM-backend parameter count; vision stages with encoder size.
+MODEL_PRESETS = {
+    "llava-500m": dict(n_params=5e8, d_base=0.004),
+    "llava-7b": dict(n_params=7e9),
+    "gemma-4b": dict(n_params=4e9),
+    "gemma-12b": dict(n_params=12e9),
+    "qwen-3b": dict(n_params=3e9),
+    "qwen-7b": dict(n_params=7e9, vid_encode_per_patch=1.2e-4),
+    "pixtral-12b": dict(n_params=12e9, img_encode_per_patch=5e-5),
+}
+
+
+def make_cost_model(name: str) -> CostModel:
+    return CostModel(name=name, **MODEL_PRESETS[name])
+
+
+def cost_model_for_arch(cfg) -> CostModel:
+    """Cost model derived from an assigned architecture's dimensions."""
+    from repro.models.params import param_count
+    from repro.models.transformer import model_decls
+    n = param_count(model_decls(cfg))
+    kv_bytes = 2 * cfg.num_layers * cfg.num_kv_heads * cfg.hd * 2
+    return CostModel(name=cfg.name, n_params=float(n),
+                     kv_bytes_per_token=float(max(kv_bytes, 1)))
+
+
+class SimExecutor:
+    """Calibrated discrete-event executor."""
+
+    def __init__(self, cost_model: CostModel, decode_block: int = 1):
+        self.cm = cost_model
+
+    def preprocess_delay(self, req: Request) -> float:
+        return self.cm.preprocess_time(req)
+
+    # -- profiler interface -------------------------------------------------
+    def isolated_run(self, req: Request) -> ProfileRecord:
+        pre = self.cm.preprocess_time(req)
+        enc = self.cm.encode_time(req)
+        prefill = self.cm.prefill_time(req.prompt_tokens, 0)
+        return ProfileRecord(
+            modality=req.modality.value, text_tokens=req.text_tokens,
+            mm_units=req.mm_units, prompt_tokens=req.prompt_tokens,
+            preprocess_time=pre, encode_time=enc, prefill_time=prefill)
+
+    def isolated_e2e(self, req: Request) -> float:
+        rec = self.isolated_run(req)
+        decode = sum(self.cm.decode_time(1, req.prompt_tokens + i)
+                     for i in range(req.output_tokens))
+        return rec.ttft + decode
+
+    # -- engine interface ----------------------------------------------------
+    def run_iteration(self, prefill_work, decode_reqs, encode_reqs) -> float:
+        """Returns the iteration duration in (simulated) seconds.
+
+        prefill_work: list[(Request, chunk_tokens)]; decode_reqs: requests
+        each generating one token; encode_reqs: requests whose
+        preprocess+encode stage runs this iteration.
+        """
+        t = 0.0
+        # preprocess runs async on CPU (vLLM-style) -> only encode hits the GPU
+        for req in encode_reqs:
+            t += self.cm.encode_time(req)
+        if prefill_work:
+            t += self.cm.c_base
+            for r, c in prefill_work:
+                t += self.cm.prefill_time(c, r.prefilled)
+        if decode_reqs:
+            ctx = sum(r.prompt_tokens + r.decoded for r in decode_reqs)
+            t += self.cm.decode_time(len(decode_reqs), ctx)
+        return max(t, 1e-3)
+
+
+class ModelExecutor:
+    """Real-JAX backend over a reduced model with a dense slot cache.
+
+    Wall-clock timings on CPU are *measured* (they drive the engine clock in
+    real mode); token values are actually computed, proving the engine +
+    cache + kernels end-to-end.
+    """
+
+    def __init__(self, cfg, max_slots: int = 8, max_len: int = 512, seed=0):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import transformer as T
+        from repro.models.params import init_params
+        self.jnp = jnp
+        self.jax = jax
+        self.T = T
+        self.cfg = cfg
+        self.max_len = max_len
+        key = jax.random.PRNGKey(seed)
+        self.params = init_params(T.model_decls(cfg), key)
+        self.caches = [init_params(T.cache_decls(cfg, 1, max_len), key)
+                       for _ in range(max_slots)]
+        self.slot_of: dict[str, int] = {}
+        self.free_slots = list(range(max_slots))
+
+    def _tokens_for(self, req: Request, start: int, n: int):
+        rng = np.random.default_rng(abs(hash(req.rid)) % (2**31))
+        toks = rng.integers(1, self.cfg.vocab_size, size=req.prompt_tokens)
+        return self.jnp.asarray(toks[start:start + n], self.jnp.int32)[None]
+
+    def acquire_slot(self, req: Request):
+        if req.rid not in self.slot_of:
+            self.slot_of[req.rid] = self.free_slots.pop()
+        return self.slot_of[req.rid]
+
+    def release_slot(self, req: Request):
+        slot = self.slot_of.pop(req.rid, None)
+        if slot is not None:
+            import jax
+            self.caches[slot] = jax.tree.map(
+                lambda a: a * 0 if a.ndim else a * 0, self.caches[slot])
+            self.free_slots.append(slot)
+
+    def isolated_run(self, req: Request) -> ProfileRecord:
+        t0 = time.perf_counter()
+        slot = self.acquire_slot(req)
+        n = min(req.prompt_tokens, self.max_len - 8)
+        toks = self._tokens_for(req, 0, n)
+        logits, cache, _ = self.T.forward(self.params, self.cfg, toks,
+                                          cache=self.caches[slot], q_start=0)
+        logits.block_until_ready()
+        prefill = time.perf_counter() - t0
+        self.caches[slot] = cache
+        self.release_slot(req)
+        return ProfileRecord(
+            modality=req.modality.value, text_tokens=req.text_tokens,
+            mm_units=req.mm_units, prompt_tokens=req.prompt_tokens,
+            preprocess_time=0.0, encode_time=0.0, prefill_time=prefill)
+
+    def isolated_e2e(self, req: Request) -> float:
+        rec = self.isolated_run(req)
+        return rec.ttft * (1 + 0.1 * req.output_tokens)
+
+    def run_iteration(self, prefill_work, decode_reqs, encode_reqs) -> float:
+        t0 = time.perf_counter()
+        jnp = self.jnp
+        for req, chunk in prefill_work:
+            slot = self.acquire_slot(req)
+            n = min(chunk, self.max_len - req.prefilled - 4)
+            if n <= 0:
+                continue
+            toks = self._tokens_for(req, req.prefilled, n)
+            _, cache, _ = self.T.forward(
+                self.params, self.cfg, toks, cache=self.caches[slot],
+                q_start=req.prefilled)
+            self.caches[slot] = cache
+        for req in decode_reqs:
+            slot = self.acquire_slot(req)
+            pos = min(req.prompt_tokens + req.decoded, self.max_len - 2)
+            tok = jnp.zeros((1, 1), jnp.int32)
+            logits, cache, _ = self.T.forward(
+                self.params, self.cfg, tok,
+                positions=jnp.full((1, 1), pos, jnp.int32),
+                cache=self.caches[slot], q_start=pos)
+            self.caches[slot] = cache
+        return time.perf_counter() - t0

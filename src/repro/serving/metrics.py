@@ -1,0 +1,71 @@
+"""Aggregate serving metrics (the paper's reported quantities)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .request import Request, VehicleClass
+
+GROUPS = ("motorcycle", "car", "truck", "overall")
+
+
+def _group(reqs: list[Request], g: str) -> list[Request]:
+    if g == "overall":
+        return reqs
+    return [r for r in reqs if r.vclass is not None and r.vclass.value == g]
+
+
+def summarize(reqs: list[Request]) -> dict:
+    """Per-class + overall: TTFT, normalized latency, SLO violation rate &
+    severity, preemption counts/time (paper Figs. 3/8/10/11...)."""
+    out = {}
+    for g in GROUPS:
+        rs = _group(reqs, g)
+        if not rs:
+            out[g] = None
+            continue
+        ttft = np.array([r.ttft() for r in rs if r.ttft() is not None])
+        norm = np.array([r.norm_latency() for r in rs
+                         if r.norm_latency() is not None])
+        viol = np.array([r.slo_violated() for r in rs])
+        sev = np.array([r.violation_severity() for r in rs if r.slo_violated()])
+        out[g] = {
+            "n": len(rs),
+            "ttft_avg": float(ttft.mean()) if len(ttft) else float("nan"),
+            "ttft_p90": float(np.percentile(ttft, 90)) if len(ttft) else float("nan"),
+            "norm_latency_avg": float(norm.mean()) if len(norm) else float("nan"),
+            "slo_violation_rate": float(viol.mean()) if len(viol) else 0.0,
+            "violation_severity_avg": float(sev.mean()) if len(sev) else 0.0,
+            "preemptions": int(sum(r.preemptions for r in rs)),
+            "preempted_time": float(sum(r.preempted_time for r in rs)),
+        }
+    return out
+
+
+def goodput(reqs: list[Request], duration: float | None = None) -> float:
+    """Requests/second finishing within their SLO (paper Fig. 15)."""
+    ok = [r for r in reqs if r.finish_time is not None and not r.slo_violated()]
+    if not ok:
+        return 0.0
+    if duration is None:
+        t0 = min(r.arrival for r in reqs)
+        t1 = max(r.finish_time for r in reqs if r.finish_time is not None)
+        duration = max(t1 - t0, 1e-9)
+    return len(ok) / duration
+
+
+def fmt_table(summary: dict, title: str = "") -> str:
+    lines = []
+    if title:
+        lines.append(f"== {title} ==")
+    hdr = f"{'class':<12}{'n':>5}{'TTFT avg':>10}{'TTFT p90':>10}" \
+          f"{'norm lat':>10}{'SLO viol':>10}{'severity':>10}{'preempt':>9}"
+    lines.append(hdr)
+    for g in GROUPS:
+        s = summary.get(g)
+        if s is None:
+            continue
+        lines.append(
+            f"{g:<12}{s['n']:>5}{s['ttft_avg']:>10.3f}{s['ttft_p90']:>10.3f}"
+            f"{s['norm_latency_avg']:>10.4f}{s['slo_violation_rate']:>10.1%}"
+            f"{s['violation_severity_avg']:>10.2f}{s['preemptions']:>9}")
+    return "\n".join(lines)

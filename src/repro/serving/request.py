@@ -1,0 +1,99 @@
+"""Request model: lifecycle, per-request metrics, and modality metadata."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+
+class Modality(str, enum.Enum):
+    TEXT = "text"
+    IMAGE = "image"
+    VIDEO = "video"
+    AUDIO = "audio"
+
+
+class VehicleClass(str, enum.Enum):
+    """The paper's trucks-cars-motorcycles abstraction."""
+    MOTORCYCLE = "motorcycle"
+    CAR = "car"
+    TRUCK = "truck"
+
+    @property
+    def static_priority(self) -> float:
+        return {"motorcycle": 0.1, "car": 0.05, "truck": 0.0}[self.value]
+
+
+class State(str, enum.Enum):
+    WAITING = "waiting"
+    PREFILLING = "prefilling"   # admitted; chunked prefill in progress
+    RUNNING = "running"         # decoding
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+    REJECTED = "rejected"       # admission control: exceeds total KV capacity
+
+
+@dataclass
+class Request:
+    rid: str
+    modality: Modality
+    arrival: float
+    # input sizes (modality-specific): text tokens always; plus patches/frames
+    text_tokens: int
+    mm_units: int = 0          # image patches or video frames (0 for text)
+    output_tokens: int = 32    # decode length target
+
+    # ---- derived / filled by the pipeline ----
+    prompt_tokens: int = 0     # total LLM prompt tokens (text + mm embeds)
+    preprocess_time: float = 0.0
+    encode_time: float = 0.0
+
+    # ---- estimator / classifier outputs ----
+    est_prefill: float = 0.0
+    est_kv_tokens: float = 0.0
+    vclass: VehicleClass | None = None
+
+    # ---- runtime state ----
+    ready_at: float = 0.0      # arrival + async CPU preprocess (vLLM-style)
+    state: State = State.WAITING
+    prefilled: int = 0         # prompt tokens prefilled so far
+    decoded: int = 0
+    enqueue_time: float = 0.0  # when (re-)entered the waiting queue
+    stage_done: bool = False   # preprocess+encode done
+
+    # ---- metrics ----
+    first_token_time: float | None = None
+    finish_time: float | None = None
+    preemptions: int = 0
+    preempted_time: float = 0.0
+    preempted_at: float | None = None
+    slo: float = float("inf")  # absolute latency target (seconds, e2e)
+
+    def ttft(self) -> float | None:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def e2e(self) -> float | None:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival
+
+    def norm_latency(self) -> float | None:
+        """Seconds per output token (the paper's 'normalized latency')."""
+        e2e = self.e2e()
+        if e2e is None or self.output_tokens == 0:
+            return None
+        return e2e / self.output_tokens
+
+    def slo_violated(self) -> bool:
+        e2e = self.e2e()
+        return e2e is not None and e2e > self.slo
+
+    def violation_severity(self) -> float:
+        e2e = self.e2e()
+        if e2e is None:
+            return 0.0
+        return max(0.0, e2e - self.slo)
+
+    def waiting_time(self, now: float) -> float:
+        return max(0.0, now - self.enqueue_time)

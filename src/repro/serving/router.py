@@ -1,0 +1,72 @@
+"""Multi-replica serving router (beyond-paper: the paper's §4.4 lists
+multi-GPU/multi-node scaling as future work).
+
+Each replica is a full TCM engine (own scheduler, KV allocator, executor).
+The router assigns requests at arrival:
+
+  * round-robin      — baseline.
+  * least-loaded     — by outstanding estimated prefill seconds.
+  * truck-isolation  — modality-aware placement: trucks (and spillover
+    cars) are pinned to a dedicated subset of replicas so motorcycles get
+    contention-free replicas — the scheduling-level analogue of ModServe's
+    stage disaggregation, built on TCM's own classifier.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request, VehicleClass
+
+
+@dataclass
+class Router:
+    executors: list            # one per replica
+    classifier: object
+    engine_cfg: EngineConfig
+    policy: str = "tcm"        # per-replica scheduling policy
+    routing: str = "least-loaded"
+    truck_replicas: int = 1    # for truck-isolation: replicas reserved
+
+    def __post_init__(self):
+        self.engines = [Engine(make_policy(self.policy), ex, self.classifier,
+                               self.engine_cfg) for ex in self.executors]
+        self._rr = 0
+        self._load = [0.0] * len(self.engines)
+
+    # ------------------------------------------------------------------
+    def _route(self, req: Request) -> int:
+        n = len(self.engines)
+        if self.routing == "round-robin":
+            self._rr = (self._rr + 1) % n
+            return self._rr
+        vclass, est_prefill, _ = self.classifier.classify(
+            req.modality.value, req.text_tokens, req.mm_units)
+        if self.routing == "least-loaded":
+            i = min(range(n), key=lambda j: self._load[j])
+            self._load[i] += est_prefill
+            return i
+        if self.routing == "truck-isolation":
+            heavy = set(range(n - self.truck_replicas, n))
+            light = [j for j in range(n) if j not in heavy]
+            if vclass is VehicleClass.TRUCK:
+                pool = sorted(heavy)
+            elif vclass is VehicleClass.CAR:
+                pool = light + sorted(heavy)   # cars spill to heavy replicas
+            else:
+                pool = light
+            i = min(pool, key=lambda j: self._load[j])
+            self._load[i] += est_prefill
+            return i
+        raise ValueError(self.routing)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request]) -> list[Request]:
+        buckets: list[list[Request]] = [[] for _ in self.engines]
+        for req in sorted(requests, key=lambda r: r.arrival):
+            buckets[self._route(req)].append(req)
+        done: list[Request] = []
+        for eng, bucket in zip(self.engines, buckets):
+            done.extend(eng.run(bucket))
+        return done

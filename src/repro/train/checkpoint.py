@@ -1,0 +1,63 @@
+"""Checkpointing via numpy .npz (orbax unavailable offline).
+
+Flattens the train-state pytree with '/'-joined key paths; restores into the
+same treedef. Works for params-only saves too (serving weights).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp.npz"
+    # bf16 is not a native numpy dtype: view as uint16 with a name marker
+    store = {}
+    for k, v in flat.items():
+        if v.dtype.name == "bfloat16":
+            store["BF16::" + k] = v.view(np.uint16)
+        else:
+            store[k] = v
+    np.savez(tmp, **store)
+    os.replace(tmp, path)
+
+
+def load(path: str, like):
+    """Restore into the structure of `like` (same treedef)."""
+    import jax.numpy as jnp
+    data = np.load(path)
+    flat = {}
+    for k in data.files:
+        if k.startswith("BF16::"):
+            flat[k[6:]] = data[k].view(jnp.bfloat16.dtype)
+        else:
+            flat[k] = data[k]
+    ref = _flatten(like)
+    assert set(ref) == set(flat), (
+        f"checkpoint keys mismatch: missing={set(ref)-set(flat)} "
+        f"extra={set(flat)-set(ref)}")
+    leaves_like, treedef = jax.tree.flatten(like)
+    # rebuild in like's flatten order
+    names = list(_flatten(like).keys())
+    assert len(names) == len(leaves_like)
+    return treedef.unflatten([jnp.asarray(flat[n]) for n in names])

@@ -1,0 +1,61 @@
+"""Train state + train step (used by the train_4k dry-run shape and the
+training example)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.params import abstract_params, init_params
+
+from .optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+
+AUX_LOSS_COEF = 0.01
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_state(cfg: ModelConfig, key) -> TrainState:
+    params = init_params(T.model_decls(cfg), key)
+    return TrainState(params, adamw_init(params))
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    """ShapeDtypeStruct train state for dry-run lowering."""
+    params = abstract_params(T.model_decls(cfg))
+    zeros = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                         params)
+    opt = AdamWState(jax.ShapeDtypeStruct((), jnp.int32), zeros, zeros)
+    return TrainState(params, opt)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat=False):
+    kwargs = {}
+    for k in ("mm_embeds", "positions", "enc_frames"):
+        if k in batch:
+            kwargs[k] = batch[k]
+    logits, _, aux = T.forward(params, cfg, batch["tokens"], remat=remat,
+                               **kwargs)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + AUX_LOSS_COEF * aux, (loss, aux)
+
+
+def train_step(state: TrainState, batch, cfg: ModelConfig, *, base_lr=3e-4,
+               remat=False):
+    (_, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state.params, cfg, batch, remat=remat)
+    lr = cosine_lr(state.opt.step + 1, base_lr=base_lr)
+    new_params, new_opt, gnorm = adamw_update(grads, state.opt, state.params,
+                                              lr=lr)
+    metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm, "lr": lr}
+    return TrainState(new_params, new_opt), metrics

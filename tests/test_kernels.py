@@ -1,0 +1,116 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py oracles
+(interpret mode on CPU), plus hypothesis property tests on invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import ref_paged_attention, ref_prefill_attention
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,hd", [
+    (1, 8, 8, 2, 2, 32),      # MHA, no history
+    (2, 16, 48, 4, 2, 64),    # GQA, chunked (history = 32)
+    (1, 24, 40, 8, 1, 128),   # MQA, odd chunk size
+    (2, 5, 21, 4, 4, 64),     # non-divisible by block sizes -> padding
+])
+def test_prefill_kernel_sweep(B, Sq, Skv, H, KV, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd)).astype(dtype)
+    q_start = Skv - Sq
+    out = ops.prefill_attention(q, k, v, q_start=q_start)
+    ref = ref_prefill_attention(q, k, v, q_start=q_start)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (8, 0.0), (0, 30.0),
+                                            (16, 50.0)])
+def test_prefill_kernel_window_softcap(window, softcap):
+    B, Sq, Skv, H, KV, hd = 2, 16, 48, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd))
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd))
+    out = ops.prefill_attention(q, k, v, q_start=32, window=window,
+                                softcap=softcap)
+    ref = ref_prefill_attention(q, k, v, q_start=32, window=window,
+                                softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,hd,P,page,mp", [
+    (1, 2, 2, 32, 8, 8, 2),
+    (2, 4, 2, 64, 16, 8, 4),
+    (3, 8, 1, 128, 32, 16, 3),
+    (2, 8, 8, 64, 16, 4, 5),
+])
+def test_paged_kernel_sweep(B, H, KV, hd, P, page, mp, dtype):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dtype)
+    kp = jax.random.normal(ks[1], (P, page, KV, hd)).astype(dtype)
+    vp = jax.random.normal(ks[2], (P, page, KV, hd)).astype(dtype)
+    bt = jax.random.randint(ks[3], (B, mp), 0, P)
+    lengths = jax.random.randint(ks[4], (B,), 1, mp * page + 1)
+    out = ops.paged_attention(q, kp, vp, bt, lengths)
+    ref = ref_paged_attention(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dtype))
+
+
+def test_paged_kernel_ignores_unmapped_pages():
+    """Entries of the page table beyond `length` must not affect output."""
+    B, H, KV, hd, P, page, mp = 1, 4, 2, 32, 8, 4, 4
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    lengths = jnp.array([6], jnp.int32)  # only pages 0-1 used
+    bt1 = jnp.array([[0, 1, 2, 3]], jnp.int32)
+    bt2 = jnp.array([[0, 1, 7, 5]], jnp.int32)  # junk tail
+    o1 = ops.paged_attention(q, kp, vp, bt1, lengths)
+    o2 = ops.paged_attention(q, kp, vp, bt2, lengths)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(1, 12), hist=st.integers(0, 12),
+       h=st.sampled_from([2, 4]), kv=st.sampled_from([1, 2]))
+def test_prefill_kernel_property(sq, hist, h, kv):
+    """Property: kernel == oracle for arbitrary chunk/history splits."""
+    hd = 32
+    skv = hist + sq
+    ks = jax.random.split(jax.random.PRNGKey(sq * 100 + hist), 3)
+    q = jax.random.normal(ks[0], (1, sq, h, hd))
+    k = jax.random.normal(ks[1], (1, skv, kv, hd))
+    v = jax.random.normal(ks[2], (1, skv, kv, hd))
+    out = ops.prefill_attention(q, k, v, q_start=hist)
+    ref = ref_prefill_attention(q, k, v, q_start=hist)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_prefill_chunks_equal_full():
+    """Running prefill in two chunks == one full pass (engine invariant)."""
+    B, S, H, KV, hd = 1, 32, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    full = ops.prefill_attention(q, k, v, q_start=0)
+    c1 = ops.prefill_attention(q[:, :16], k[:, :16], v[:, :16], q_start=0)
+    c2 = ops.prefill_attention(q[:, 16:], k, v, q_start=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([c1, c2], 1)),
+                               np.asarray(full), atol=2e-5)

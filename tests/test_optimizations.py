@@ -1,0 +1,106 @@
+"""Correctness tests for the beyond-paper optimizations (EXPERIMENTS §Perf):
+int8 KV cache numerics, grouped-GQA equivalence, MoE bf16 combine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.models.params import init_params, tree_map_decls
+from repro.models.params import ParamDecl
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_int8_kv_cache_close_to_f32():
+    """Decode logits with int8 KV stay close to the f32-cache reference."""
+    cfg = dataclasses.replace(get_reduced("chatglm3_6b"), dtype=jnp.float32)
+    params = init_params(T.model_decls(cfg), KEY)
+    B, P = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P + 1), 0,
+                              cfg.vocab_size)
+
+    def run(kv_dtype):
+        cache = init_params(T.cache_decls(cfg, B, 64, dtype=kv_dtype), KEY)
+        _, cache, _ = T.forward(params, cfg, toks[:, :P], cache=cache)
+        lg, _, _ = T.forward(params, cfg, toks[:, P:],
+                             positions=jnp.full((B, 1), P), cache=cache,
+                             q_start=P)
+        return jax.nn.softmax(lg[:, 0].astype(jnp.float32))
+
+    ref = run(jnp.float32)
+    q8 = run(jnp.int8)
+    # probability distributions should be close despite 8-bit KV
+    tv = 0.5 * float(jnp.abs(ref - q8).sum(-1).max())
+    assert tv < 0.05, f"int8 KV total-variation too high: {tv}"
+
+
+def test_grouped_gqa_equals_repeat_reference():
+    """mha's grouped GQA path == explicit kv-head repetition."""
+    from repro.models.layers import mha
+    B, Tq, Tk, H, KV, hd = 2, 8, 12, 8, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Tq, H, hd))
+    k = jax.random.normal(ks[1], (B, Tk, KV, hd))
+    v = jax.random.normal(ks[2], (B, Tk, KV, hd))
+    mask = jnp.tril(jnp.ones((Tq, Tk), bool), k=Tk - Tq)[None, None]
+    out = mha(q, k, v, mask)
+    kr = jnp.repeat(k, H // KV, axis=2)
+    vr = jnp.repeat(v, H // KV, axis=2)
+    ref = mha(q, kr, vr, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_sliding_window_ignores_stale_context():
+    """Decode with window W must be unaffected by K/V entries older than W
+    — the invariant that makes window-sized caches valid (§Perf, gemma)."""
+    cfg = dataclasses.replace(get_reduced("gemma3_27b"), dtype=jnp.float32,
+                              sliding_window=16, local_global_period=0)
+    params = init_params(T.model_decls(cfg), KEY)
+    B, P = 1, 40
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, P + 1), 0,
+                              cfg.vocab_size)
+
+    def run(corrupt_old):
+        cache = init_params(T.cache_decls(cfg, B, 64, dtype=jnp.float32), KEY)
+        _, cache, _ = T.forward(params, cfg, toks[:, :P], cache=cache)
+        if corrupt_old:
+            # trash all K/V entries strictly older than the window
+            def trash(tree):
+                out = dict(tree)
+                for key in ("k", "v"):
+                    if key in out:
+                        arr = out[key]
+                        out[key] = arr.at[:, :, :P - 16].set(99.0)
+                return out
+            cache = {
+                "stages": [{b: trash(blk) for b, blk in st.items()}
+                           for st in cache["stages"]],
+                "idx": cache["idx"],
+            }
+        lg, _, _ = T.forward(params, cfg, toks[:, P:],
+                             positions=jnp.full((B, 1), P), cache=cache,
+                             q_start=P)
+        return lg[:, 0]
+
+    np.testing.assert_allclose(np.asarray(run(False)),
+                               np.asarray(run(True)), atol=1e-6)
+
+
+def test_flash_kernel_model_path_equivalence():
+    """Full model forward with the Pallas flash kernel == jnp attention."""
+    from repro.models import layers as L
+    cfg = dataclasses.replace(get_reduced("chatglm3_6b"), dtype=jnp.float32,
+                              num_layers=2)
+    params = init_params(T.model_decls(cfg), KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 24), 0,
+                              cfg.vocab_size)
+    ref, _, _ = T.forward(params, cfg, toks)
+    L.set_flash_kernel(True)
+    try:
+        out, _, _ = T.forward(params, cfg, toks)
+    finally:
+        L.set_flash_kernel(False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-4)
