@@ -1,0 +1,116 @@
+"""Scheduler host-overhead benchmark (ISSUE 1 tentpole metric).
+
+Measures engine wall-clock and per-iteration host overhead at 3k–10k
+request workloads across all five policies, comparing the incremental
+scheduling core against the seed's brute-force path
+(``EngineConfig.legacy_scheduling=True``: full candidate re-sort +
+per-token allocator calls + O(N) membership scans). Every comparison
+asserts *decision equivalence* first — identical finish order, TTFT and
+finish times on fixed seeds — so the speedup is pure host-overhead
+reduction, never a scheduling change.
+
+Full mode writes ``BENCH_scheduler.json`` at the repo root (the tracked
+perf baseline); ``--fast`` is a <60 s smoke that checks equivalence and
+prints CSV rows without touching the baseline:
+
+    PYTHONPATH=src python -m benchmarks.run --only scheduler_overhead --fast
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from benchmarks.common import csv_row, stack
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.workload import WorkloadConfig, generate
+
+POLICIES = ["fcfs", "edf", "static", "naive-aging", "tcm"]
+RATE = 12.0       # req/s: ~6x service capacity -> thousands-deep queues
+SEED = 7
+BASELINE_PATH = Path(__file__).resolve().parent.parent / \
+    "BENCH_scheduler.json"
+
+
+def _run_engine(policy: str, n: int, *, legacy: bool):
+    ex, _, smart, _ = stack("llava-7b")
+    eng = Engine(make_policy(policy), ex, smart,
+                 EngineConfig(token_budget=512, legacy_scheduling=legacy))
+    reqs = generate(WorkloadConfig(mix="MH", rate=RATE, num_requests=n,
+                                   seed=SEED))
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    fingerprint = [(r.rid, r.first_token_time, r.finish_time, r.preemptions)
+                   for r in done]
+    return wall, eng.iterations, fingerprint
+
+
+def _compare(policy: str, n: int):
+    """(incremental_s, legacy_s, iterations); asserts bit-equal decisions."""
+    w_inc, it_inc, fp_inc = _run_engine(policy, n, legacy=False)
+    w_leg, it_leg, fp_leg = _run_engine(policy, n, legacy=True)
+    assert fp_inc == fp_leg, \
+        f"{policy}@{n}: incremental scheduling diverged from the seed path"
+    assert it_inc == it_leg
+    return w_inc, w_leg, it_inc
+
+
+def main(fast: bool = False):
+    rows = []
+    results: dict = {"meta": {
+        "workload": {"mix": "MH", "rate": RATE, "seed": SEED,
+                     "model": "llava-7b", "token_budget": 512},
+        "fast": fast,
+        "note": "legacy = seed brute-force path; decisions are asserted "
+                "bit-identical, so speedup is pure host overhead",
+    }, "policies": {}}
+    n_sweep = 800 if fast else 3000
+    n_head = 2000 if fast else 10000
+
+    for pol in POLICIES:
+        w_inc, w_leg, iters = _compare(pol, n_sweep)
+        results["policies"][pol] = {
+            "num_requests": n_sweep,
+            "iterations": iters,
+            "legacy_s": round(w_leg, 4),
+            "incremental_s": round(w_inc, 4),
+            "speedup": round(w_leg / w_inc, 2),
+            "legacy_us_per_iter": round(1e6 * w_leg / iters, 2),
+            "incremental_us_per_iter": round(1e6 * w_inc / iters, 2),
+        }
+        rows.append(csv_row(f"sched_overhead/{pol}/n{n_sweep}/legacy_s",
+                            w_leg))
+        rows.append(csv_row(f"sched_overhead/{pol}/n{n_sweep}/incremental_s",
+                            w_inc))
+        rows.append(csv_row(f"sched_overhead/{pol}/n{n_sweep}/speedup",
+                            w_leg / w_inc, "decisions bit-identical"))
+        print(f"  {pol:<12} n={n_sweep}: legacy {w_leg:6.2f}s  "
+              f"incremental {w_inc:5.2f}s  ({w_leg / w_inc:4.1f}x, "
+              f"{iters} iters)")
+
+    # headline: 10k-request tcm run (the ISSUE acceptance target: >=5x)
+    w_inc, w_leg, iters = _compare("tcm", n_head)
+    results["headline_tcm"] = {
+        "num_requests": n_head,
+        "iterations": iters,
+        "legacy_s": round(w_leg, 4),
+        "incremental_s": round(w_inc, 4),
+        "speedup": round(w_leg / w_inc, 2),
+    }
+    rows.append(csv_row(f"sched_overhead/tcm/n{n_head}/speedup",
+                        w_leg / w_inc, "headline; >=5x target"))
+    print(f"  headline tcm n={n_head}: legacy {w_leg:.2f}s  "
+          f"incremental {w_inc:.2f}s  ({w_leg / w_inc:.1f}x)")
+    if not fast:
+        assert w_leg / w_inc >= 5.0, \
+            f"headline speedup {w_leg / w_inc:.2f}x below the 5x target"
+        BASELINE_PATH.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"  baseline written to {BASELINE_PATH.name}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

@@ -1,0 +1,6 @@
+"""Engine-side KV memory subsystem: page accounting (allocator) and the
+JAX-side paged store (paged — imported directly to avoid pulling jax into
+scheduler-only code paths)."""
+from .allocator import BlockAllocator, OutOfPages
+
+__all__ = ["BlockAllocator", "OutOfPages"]

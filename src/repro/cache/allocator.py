@@ -5,6 +5,11 @@ exercise: KV capacity is expressed in fixed-size pages; requests allocate
 pages as their context grows and free them on completion/preemption. The
 scheduler consults ``can_allocate``/``utilization`` for admission and
 preemption decisions.
+
+All operations are O(pages moved): the free list is a stack and ownership
+is a dict of page lists. The engine only calls ``allocate`` for a decoding
+request when its context crosses a page boundary (DESIGN.md §Incremental
+scheduling core), so steady-state decode does zero allocator work.
 """
 from __future__ import annotations
 
@@ -45,6 +50,9 @@ class BlockAllocator:
 
     def pages_of(self, rid: str) -> list[int]:
         return list(self._owned.get(rid, ()))
+
+    def owned_pages(self, rid: str) -> int:
+        return len(self._owned.get(rid, ()))
 
     # -- mutation ----------------------------------------------------------
     def allocate(self, rid: str, tokens: int) -> list[int]:

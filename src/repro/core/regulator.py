@@ -39,4 +39,10 @@ class PriorityRegulator:
         return -math.log(max(self.priority(vclass, waiting_time), EPS))
 
     def request_score(self, req: Request, now: float) -> float:
-        return self.score(req.vclass, req.waiting_time(now))
+        """Inlined ``score(vclass, waiting_time)`` — the scheduler hot path
+        calls this per queue-head comparison, so skip the method hops while
+        keeping the exact expression order (bit-identical results)."""
+        c = self.params[req.vclass]
+        wait = max(0.0, now - req.enqueue_time)
+        age = 1.0 - math.exp(-c["k"] * (wait ** c["p"]))
+        return -math.log(max(c["static"] + age, EPS))

@@ -15,6 +15,19 @@ from .sharding import shard_act
 
 NEG_INF = -1e30
 
+
+@jax.custom_jvp
+def opt_barrier(x):
+    """optimization_barrier that differentiates as identity — the barrier
+    only pins XLA scheduling on the primal; this JAX version has no
+    differentiation rule for the primitive, which broke every train step."""
+    return jax.lax.optimization_barrier(x)
+
+
+@opt_barrier.defjvp
+def _opt_barrier_jvp(primals, tangents):
+    return opt_barrier(primals[0]), tangents[0]
+
 # flip on for TPU deployments (or tests): route full-context attention
 # through the Pallas flash kernel instead of the jnp path
 USE_FLASH_KERNEL = False
@@ -168,7 +181,7 @@ def attention_block(x, p, cfg: ModelConfig, *, positions, q_start=0,
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     # barrier pins the TP all-reduce to bf16 here; without it XLA hoists the
     # reduce past the f32 norm upcast and moves 2x the bytes (§Perf iter 3)
-    out = jax.lax.optimization_barrier(out)
+    out = opt_barrier(out)
     return shard_act(out, "batch", "seq", "embed_act"), new_cache
 
 
@@ -230,7 +243,7 @@ def moe_block(x, p, cfg: ModelConfig, *, group_size: int = 512):
     # combine in compute dtype: halves the TP all-reduce volume vs f32
     # (EXPERIMENTS §Perf iter 2); gates stay f32 upstream for routing quality
     y = jnp.einsum("gecd,gsec->gsd", eo, combine.astype(eo.dtype))
-    y = jax.lax.optimization_barrier(y.astype(x.dtype))
+    y = opt_barrier(y.astype(x.dtype))
     y = y.reshape(B, S + pad, D)[:, :S]
 
     # Switch aux load-balance loss

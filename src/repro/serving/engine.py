@@ -12,12 +12,22 @@ Per iteration (vLLM V1 semantics with chunked prefill):
      prefill chunk (paper Fig. 6 TTFT decomposition);
   4. requests finishing prefill emit their first token that iteration
      (TTFT); decoding requests emit one token per iteration.
+
+Scheduling bookkeeping is incremental (DESIGN.md §Incremental scheduling
+core): the waiting set lives in a ``WaitingIndex`` consumed lazily in rank
+order (no per-iteration global sort), running/prefilling membership is
+O(1) (insertion-ordered dicts), KV grows only at page boundaries instead
+of one allocator call per decoded token, and preemption probes go through
+a rank-sorted ``VictimView``. ``EngineConfig.legacy_scheduling=True``
+routes planning through the seed's brute-force path — kept as the
+equivalence oracle and benchmark baseline; scheduling decisions are
+bit-identical either way (benchmarks/scheduler_overhead.py enforces it).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.cache.allocator import BlockAllocator
+from repro.cache import BlockAllocator, OutOfPages
 from repro.core.queues import QueueManager
 from repro.core.scheduler import SchedulerPolicy
 from repro.serving.request import Request, State, VehicleClass
@@ -36,6 +46,9 @@ class EngineConfig:
     # iteration so their inter-token latency stays near isolated speed.
     decode_priority: bool = False
     decode_priority_frac: float = 0.6
+    # seed's brute-force planning (full re-sort + per-token allocate):
+    # the decision-equivalence oracle and host-overhead baseline
+    legacy_scheduling: bool = False
 
 
 @dataclass
@@ -50,56 +63,84 @@ class Engine:
                                         self.config.page_size)
         self.queues = QueueManager()
         self.now = 0.0
-        self.running: list[Request] = []     # decoding
-        self.prefilling: list[Request] = []  # admitted, chunked prefill
+        # insertion-ordered sets (dict keys): O(1) membership/removal while
+        # iterating in the same order the seed's lists did
+        self.running: dict[Request, None] = {}     # decoding
+        self.prefilling: dict[Request, None] = {}  # admitted, chunked prefill
         self.finished: list[Request] = []
-        self.rejected: list[Request] = []    # admission control
+        self.rejected: list[Request] = []          # admission control
         self.iterations = 0
+        if self.config.legacy_scheduling:
+            self.wait_index = None
+        else:
+            self.wait_index = self.policy.make_waiting_index()
+            self.queues.listener = self.wait_index
+        self._victim_view = None
+        self._victim_view_now = None
 
     # ------------------------------------------------------------------
-    def _ingest(self, pending: list[Request]) -> list[Request]:
-        """Move arrived requests into the classified waiting queues."""
-        still = []
-        for req in pending:
-            if req.arrival <= self.now:
-                vclass, est_prefill, est_kv = self.classifier.classify(
-                    req.modality.value, req.text_tokens, req.mm_units)
-                req.vclass = vclass
-                req.est_prefill = est_prefill
-                req.est_kv_tokens = est_kv
-                # multimodal preprocess runs async on CPU (vLLM-style):
-                # delays this request's readiness, not the GPU
-                pre = getattr(self.executor, "preprocess_delay",
-                              lambda r: 0.0)(req)
-                req.preprocess_time = pre
-                req.ready_at = req.arrival + pre
-                if req.slo == float("inf"):
-                    req.slo = self.config.slo_scale * \
-                        self.executor.isolated_e2e(req)
-                # admission control: a request whose context can never fit the
-                # total KV capacity is rejected up front (vLLM errors out)
-                need = req.prompt_tokens + req.output_tokens
-                if self.allocator.pages_for_tokens(need) > \
-                        self.allocator.num_pages:
-                    req.state = State.REJECTED
-                    self.rejected.append(req)
-                    continue
-                self.queues.push(req, self.now)
-            else:
-                still.append(req)
-        return still
+    def _ingest(self, pending: list[Request], start: int = 0) -> int:
+        """Move arrived requests into the classified waiting queues.
+        ``pending`` is sorted by arrival; returns the new start index (the
+        seed rebuilt the whole list every iteration — O(N) per step)."""
+        i, n = start, len(pending)
+        while i < n and pending[i].arrival <= self.now:
+            req = pending[i]
+            i += 1
+            vclass, est_prefill, est_kv = self.classifier.classify(
+                req.modality.value, req.text_tokens, req.mm_units)
+            req.vclass = vclass
+            req.est_prefill = est_prefill
+            req.est_kv_tokens = est_kv
+            # multimodal preprocess runs async on CPU (vLLM-style):
+            # delays this request's readiness, not the GPU
+            pre = getattr(self.executor, "preprocess_delay",
+                          lambda r: 0.0)(req)
+            req.preprocess_time = pre
+            req.ready_at = req.arrival + pre
+            if req.slo == float("inf"):
+                req.slo = self.config.slo_scale * \
+                    self.executor.isolated_e2e(req)
+            # admission control: a request whose context can never fit the
+            # total KV capacity is rejected up front (vLLM errors out)
+            need = req.prompt_tokens + req.output_tokens
+            if self.allocator.pages_for_tokens(need) > \
+                    self.allocator.num_pages:
+                req.state = State.REJECTED
+                self.rejected.append(req)
+                continue
+            self.queues.push(req, self.now)
+        return i
 
     # ------------------------------------------------------------------
+    def _victims(self):
+        """Rank-sorted running+prefilling view, rebuilt when the clock
+        moves and patched incrementally on admit/preempt in between."""
+        if self._victim_view is None or self._victim_view_now != self.now:
+            pool = list(self.running) + list(self.prefilling)
+            self._victim_view = self.policy.make_victim_view(pool, self.now)
+            self._victim_view_now = self.now
+        return self._victim_view
+
     def _try_admit(self, req: Request) -> bool:
         """Allocate KV pages for the full prompt; preempt strictly
         lower-priority victims if needed (no preemption cycles)."""
         tokens = req.prompt_tokens
         tries = 0
+        legacy = self.config.legacy_scheduling
+        bar = None
         while not self.allocator.can_allocate(tokens):
-            victim = self.policy.pick_victim(
-                self.running + self.prefilling, self.now, for_req=req)
-            if victim is None or victim is req or \
-                    tries >= self.config.max_preemptions_per_iter:
+            if tries >= self.config.max_preemptions_per_iter:
+                return False
+            if legacy:
+                victim = self.policy.pick_victim(
+                    list(self.running) + list(self.prefilling), self.now,
+                    for_req=req)
+            else:
+                if bar is None:
+                    bar = self.policy.rank(req, self.now)
+                victim = self._victims().pick(bar=bar, exclude=req)
+            if victim is None or victim is req:
                 return False
             self._preempt(victim)
             tries += 1
@@ -109,10 +150,10 @@ class Engine:
     def _preempt(self, victim: Request) -> None:
         """Recompute-style eviction: drop KV, back to the waiting queue."""
         self.allocator.free(victim.rid)
-        if victim in self.running:
-            self.running.remove(victim)
-        if victim in self.prefilling:
-            self.prefilling.remove(victim)
+        self.running.pop(victim, None)
+        self.prefilling.pop(victim, None)
+        if self._victim_view is not None:
+            self._victim_view.discard(victim)
         if hasattr(self.executor, "release_slot"):
             self.executor.release_slot(victim)
         victim.preemptions += 1
@@ -120,6 +161,22 @@ class Engine:
         victim.prefilled = 0
         victim.state = State.PREEMPTED
         self.queues.push(victim, self.now)
+
+    def _admit(self, req: Request) -> bool:
+        """Waiting -> prefilling transition (shared by both plan paths).
+        Caller checks the max_num_seqs cap first."""
+        if not self._try_admit(req):
+            return False
+        self.queues.remove(req)
+        if req.preempted_at is not None:
+            req.preempted_time += self.now - req.preempted_at
+            req.preempted_at = None
+        req.state = State.PREFILLING
+        self.prefilling[req] = None
+        if self._victim_view is not None and \
+                self._victim_view_now == self.now:
+            self._victim_view.add(req)
+        return True
 
     # ------------------------------------------------------------------
     def _plan(self):
@@ -133,14 +190,77 @@ class Engine:
             # share while motorcycles are decoding (beyond-paper)
             budget = min(budget, int(self.config.token_budget *
                                      self.config.decode_priority_frac))
+        if self.config.legacy_scheduling:
+            prefill_work, encode_batch = self._plan_prefill_legacy(budget)
+        else:
+            prefill_work, encode_batch = self._plan_prefill(budget)
+        return prefill_work, decode_batch, encode_batch
 
+    def _plan_prefill(self, budget: int):
+        """One policy-ordered pass over BOTH in-flight prefills and waiting
+        requests: lets a fresh motorcycle take budget ahead of a truck's
+        next chunk ("reshaping batches", paper §3.1) while admitted
+        requests keep their KV pages.
+
+        The waiting set is drawn lazily from the WaitingIndex — only as
+        many candidates as the budget/admission allows are ever ranked —
+        and merged with a rank-sorted snapshot of the (small, capped)
+        prefilling set. Ties resolve prefilling-first, exactly like the
+        seed's stable sort over [prefilling] + [waiting]."""
         prefill_work: list[tuple[Request, int]] = []
         encode_batch: list[Request] = []
+        if budget <= 0:
+            return prefill_work, encode_batch
+        policy, now, cap = self.policy, self.now, self.config.max_num_seqs
+        pre = sorted((policy.rank(r, now), i, r)
+                     for i, r in enumerate(self.prefilling))
+        pi, npre = 0, len(pre)
+        idx = self.wait_index
+        idx.begin_plan(now)
+        try:
+            head = idx.next_candidate(now)
+            while budget > 0:
+                if head is not None and (pi >= npre or
+                                         head[0] < pre[pi][0]):
+                    req = head[1]
+                    if len(self.running) + len(self.prefilling) >= cap:
+                        # no later waiting candidate can admit either; the
+                        # seed scanned and skipped them all (side-effect
+                        # free), so stop drawing from the index
+                        head = None
+                        continue
+                    if not self._admit(req):
+                        head = idx.next_candidate(now)
+                        continue
+                    head = idx.next_candidate(now)
+                elif pi < npre:
+                    req = pre[pi][2]
+                    pi += 1
+                    if req not in self.prefilling:
+                        # preempted earlier in this pass; the seed re-ran
+                        # such snapshot entries through the waiting branch
+                        if len(self.running) + len(self.prefilling) >= cap \
+                                or not self._admit(req):
+                            continue
+                else:
+                    break
+                if not req.stage_done:
+                    encode_batch.append(req)
+                    req.stage_done = True
+                chunk = min(budget, req.prompt_tokens - req.prefilled)
+                if chunk > 0:
+                    prefill_work.append((req, chunk))
+                    budget -= chunk
+        finally:
+            idx.end_plan()
+        return prefill_work, encode_batch
 
-        # one policy-ordered pass over BOTH in-flight prefills and waiting
-        # requests: lets a fresh motorcycle take budget ahead of a truck's
-        # next chunk ("reshaping batches", paper §3.1) while admitted
-        # requests keep their KV pages.
+    def _plan_prefill_legacy(self, budget: int):
+        """Seed behaviour: re-sort the full candidate set every iteration
+        (the host-overhead baseline the incremental path is measured
+        against; decisions are identical)."""
+        prefill_work: list[tuple[Request, int]] = []
+        encode_batch: list[Request] = []
         candidates = self.policy.order(
             list(self.prefilling) +
             [r for r in self.queues.peek_all() if r.ready_at <= self.now],
@@ -148,21 +268,12 @@ class Engine:
         for req in candidates:
             if budget <= 0:
                 break
-            admitted = req in self.prefilling
-            if not admitted:
+            if req not in self.prefilling:
                 if len(self.running) + len(self.prefilling) >= \
                         self.config.max_num_seqs:
                     continue
-                if not self._try_admit(req):
+                if not self._admit(req):
                     continue
-                self.queues.remove(req)
-                if req.preempted_at is not None:
-                    req.preempted_time += self.now - req.preempted_at
-                    req.preempted_at = None
-                req.state = State.PREFILLING
-                self.prefilling.append(req)
-            elif req not in self.prefilling:
-                continue  # got preempted by a later admission this pass
             if not req.stage_done:
                 encode_batch.append(req)
                 req.stage_done = True
@@ -170,17 +281,43 @@ class Engine:
             if chunk > 0:
                 prefill_work.append((req, chunk))
                 budget -= chunk
-        return prefill_work, decode_batch, encode_batch
+        return prefill_work, encode_batch
 
     # ------------------------------------------------------------------
-    def step(self, pending: list[Request]) -> list[Request]:
-        pending = self._ingest(pending)
+    def _grow_kv(self, req: Request, total_tokens: int) -> bool:
+        """Grow a decoding request's KV to ``total_tokens``. On pressure,
+        preempt a strictly-eligible victim; with no victim (or if the
+        retry still fails), preempt the request itself recompute-style —
+        the seed crashed on an uncaught OutOfPages here."""
+        try:
+            self.allocator.allocate(req.rid, total_tokens)
+            return True
+        except OutOfPages:
+            pass
+        if self.config.legacy_scheduling:
+            victim = self.policy.pick_victim(
+                [r for r in list(self.running) + list(self.prefilling)
+                 if r is not req], self.now)
+        else:
+            victim = self._victims().pick(exclude=req)
+        if victim is not None:
+            self._preempt(victim)
+            try:
+                self.allocator.allocate(req.rid, total_tokens)
+                return True
+            except OutOfPages:
+                pass
+        self._preempt(req)
+        return False
+
+    def _step_core(self, pending: list[Request], start: int) -> int:
+        start = self._ingest(pending, start)
         if not (self.running or self.prefilling or len(self.queues)):
-            if pending:  # idle: jump to next arrival
-                self.now = max(self.now, pending[0].arrival)
-                pending = self._ingest(pending)
+            if start < len(pending):  # idle: jump to next arrival
+                self.now = max(self.now, pending[start].arrival)
+                start = self._ingest(pending, start)
             else:
-                return pending
+                return start
 
         prefill_work, decode_batch, encode_batch = self._plan()
         if not (prefill_work or decode_batch or encode_batch) \
@@ -202,43 +339,55 @@ class Engine:
                 req.first_token_time = self.now  # prefill iter emits token 1
                 req.decoded = 1
                 req.state = State.RUNNING
-                self.prefilling.remove(req)
-                self.running.append(req)
+                del self.prefilling[req]
+                self.running[req] = None
+        page = self.config.page_size
+        legacy = self.config.legacy_scheduling
+        alloc = self.allocator
         done = []
         for req in decode_batch:
             if req not in self.running:
                 continue  # preempted mid-plan (defensive)
             req.decoded += 1
-            # grow KV by one token; preempt someone if out of pages
-            try:
-                self.allocator.allocate(req.rid,
-                                        req.prompt_tokens + req.decoded)
-            except Exception:
-                victim = self.policy.pick_victim(
-                    [r for r in self.running + self.prefilling if r is not req],
-                    self.now)
-                if victim is not None:
-                    self._preempt(victim)
-                    self.allocator.allocate(
-                        req.rid, req.prompt_tokens + req.decoded)
+            total = req.prompt_tokens + req.decoded
+            # KV grows only when the context outruns the pages already
+            # owned (the first token after prefill rides the admission
+            # allocation's slack); the seed called allocate() every token
+            if (legacy or total > page * alloc.owned_pages(req.rid)) and \
+                    not self._grow_kv(req, total):
+                continue  # req itself was preempted (recompute)
             if req.decoded >= req.output_tokens:
                 done.append(req)
         for req in done:
+            if req not in self.running:
+                continue  # evicted by a later decode-growth preemption
             req.finish_time = self.now
             req.state = State.FINISHED
-            self.running.remove(req)
+            del self.running[req]
             self.allocator.free(req.rid)
+            if self._victim_view is not None:
+                self._victim_view.discard(req)
             if hasattr(self.executor, "release_slot"):
                 self.executor.release_slot(req)
             self.finished.append(req)
-        return pending
+        return start
+
+    def step(self, pending: list[Request]) -> list[Request]:
+        # the cursor-based core needs arrival order; the seed's step
+        # accepted any order, so sort defensively when the caller didn't
+        if any(pending[i].arrival > pending[i + 1].arrival
+               for i in range(len(pending) - 1)):
+            pending = sorted(pending, key=lambda r: r.arrival)
+        i = self._step_core(pending, 0)
+        return pending[i:] if i else pending
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request], max_iters: int = 2_000_000):
         pending = sorted(requests, key=lambda r: r.arrival)
         n = len(pending)
+        start = 0
         it = 0
         while len(self.finished) + len(self.rejected) < n and it < max_iters:
-            pending = self.step(pending)
+            start = self._step_core(pending, start)
             it += 1
         return self.finished

@@ -118,10 +118,17 @@ class SimExecutor:
             preprocess_time=pre, encode_time=enc, prefill_time=prefill)
 
     def isolated_e2e(self, req: Request) -> float:
+        """Isolated end-to-end latency; called once per request at ingest
+        (SLO assignment), so the decode sum over
+        ``decode_time(1, prompt + i) for i < output_tokens`` is evaluated in
+        closed form: the cost model is affine in context, so the sum is an
+        arithmetic series — O(1) instead of an O(output_tokens) loop."""
         rec = self.isolated_run(req)
-        decode = sum(self.cm.decode_time(1, req.prompt_tokens + i)
-                     for i in range(req.output_tokens))
-        return rec.ttft + decode
+        n = req.output_tokens
+        base = self.cm.decode_time(1, 0)          # weights + batch FLOPs term
+        kv_coef = self.cm.kv_bytes_per_token / self.cm.hbm_bw
+        ctx_sum = n * req.prompt_tokens + n * (n - 1) // 2
+        return rec.ttft + n * base + kv_coef * ctx_sum
 
     # -- engine interface ----------------------------------------------------
     def run_iteration(self, prefill_work, decode_reqs, encode_reqs) -> float:

@@ -32,8 +32,8 @@ class State(str, enum.Enum):
     REJECTED = "rejected"       # admission control: exceeds total KV capacity
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)  # identity semantics: hashable, O(1) membership in the
+class Request:        # engine's running/prefilling sets (rids are unique)
     rid: str
     modality: Modality
     arrival: float
