@@ -1,0 +1,121 @@
+"""CI perf-regression gate (non-blocking job in .github/workflows/ci.yml).
+
+Compares a fresh smoke run against the committed baselines and exits
+non-zero on regression, so perf drift is visible on every PR without
+blocking it:
+
+  * ``BENCH_encode.json`` — *simulated* time on fixed seeds, fully
+    deterministic: the fresh run must match the baseline within a small
+    float tolerance (a mismatch means engine/cost-model behaviour changed
+    without regenerating the baseline).
+  * ``BENCH_scheduler.json`` — host wall-clock speedups (incremental vs
+    seed brute-force scheduling). CI runners are slow and noisy and the
+    smoke uses smaller workloads than the committed full run, so the gate
+    is generous: the fresh speedup only has to clear a floor derived from
+    the committed headline, never match it. Decision equivalence between
+    the fast and legacy paths is still asserted exactly (by ``_compare``).
+
+    PYTHONPATH=src python -m benchmarks.check_regression [--skip-wallclock]
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# deterministic sim metrics: allow tiny cross-platform float drift
+SIM_REL_TOL = 0.02
+# host wall-clock: fresh fast-smoke speedup must clear this fraction of the
+# committed (larger-workload) speedup, and at least break even. The smoke
+# runs a much smaller workload than the committed n=10000 headline (where
+# the incremental path's advantage is far larger) on a noisy shared
+# runner, hence the very generous fraction — the check is really "the
+# incremental scheduler is still clearly faster than brute force".
+WALLCLOCK_FRACTION = 0.05
+WALLCLOCK_FLOOR = 1.0
+WALLCLOCK_N = 2000
+
+
+def _close(a: float, b: float, rel: float = SIM_REL_TOL) -> bool:
+    return math.isclose(a, b, rel_tol=rel, abs_tol=1e-9)
+
+
+def check_encode_baseline(failures: list[str]) -> None:
+    path = ROOT / "BENCH_encode.json"
+    if not path.exists():
+        failures.append("BENCH_encode.json missing - run "
+                        "`python -m benchmarks.run --only encode_overlap`")
+        return
+    baseline = json.loads(path.read_text())
+    from benchmarks.encode_overlap import measure
+    fresh = measure()
+    checks = [
+        ("overlap.moto_ttft_on",
+         baseline["overlap"]["on"]["ttft_avg"]["motorcycle"],
+         fresh["overlap"]["on"]["ttft_avg"]["motorcycle"]),
+        ("overlap.moto_ttft_off",
+         baseline["overlap"]["off"]["ttft_avg"]["motorcycle"],
+         fresh["overlap"]["off"]["ttft_avg"]["motorcycle"]),
+        ("overlap.overall_ttft_on",
+         baseline["overlap"]["on"]["ttft_avg"]["overall"],
+         fresh["overlap"]["on"]["ttft_avg"]["overall"]),
+        ("cache.hit_rate",
+         baseline["cache"]["hit_rate"], fresh["cache"]["hit_rate"]),
+        ("cache.overall_ttft_on",
+         baseline["cache"]["on"]["ttft_avg"]["overall"],
+         fresh["cache"]["on"]["ttft_avg"]["overall"]),
+    ]
+    for name, want, got in checks:
+        status = "ok" if _close(want, got) else "REGRESSION"
+        print(f"  encode/{name}: baseline {want:.5f}  fresh {got:.5f}  "
+              f"[{status}]")
+        if status != "ok":
+            failures.append(f"encode/{name}: {got:.5f} vs baseline "
+                            f"{want:.5f} (tol {SIM_REL_TOL:.0%})")
+    if fresh["overlap"]["moto_ttft_improvement"] <= 0:
+        failures.append("encode/overlap no longer improves motorcycle TTFT")
+
+
+def check_scheduler_baseline(failures: list[str]) -> None:
+    path = ROOT / "BENCH_scheduler.json"
+    if not path.exists():
+        failures.append("BENCH_scheduler.json missing - run "
+                        "`python -m benchmarks.run --only scheduler_overhead`")
+        return
+    baseline = json.loads(path.read_text())
+    committed = baseline["headline_tcm"]["speedup"]
+    floor = max(WALLCLOCK_FLOOR, WALLCLOCK_FRACTION * committed)
+    # small fast-smoke workload; _compare also asserts the fast path's
+    # decisions stay bit-identical to legacy_scheduling
+    from benchmarks.scheduler_overhead import _compare
+    w_inc, w_leg, iters = _compare("tcm", WALLCLOCK_N)
+    fresh = w_leg / w_inc
+    status = "ok" if fresh >= floor else "REGRESSION"
+    print(f"  scheduler/tcm_speedup: committed {committed:.1f}x "
+          f"(n={baseline['headline_tcm']['num_requests']}), fresh fast-smoke "
+          f"{fresh:.1f}x over {iters} iters, floor {floor:.1f}x  [{status}]")
+    if status != "ok":
+        failures.append(f"scheduler/tcm_speedup {fresh:.2f}x below floor "
+                        f"{floor:.2f}x (committed {committed:.2f}x)")
+
+
+def main(argv: list[str]) -> int:
+    failures: list[str] = []
+    print("== perf regression gate ==")
+    check_encode_baseline(failures)
+    if "--skip-wallclock" not in argv:
+        check_scheduler_baseline(failures)
+    if failures:
+        print("\nREGRESSIONS DETECTED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nno perf regressions vs committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

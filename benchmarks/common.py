@@ -9,7 +9,7 @@ from repro.core.profiler import WorkloadProfiler
 from repro.core.scheduler import make_policy
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.executors import SimExecutor, make_cost_model
-from repro.serving.metrics import goodput, summarize
+from repro.serving.metrics import summarize
 from repro.serving.workload import WorkloadConfig, generate, \
     profiling_workload
 

@@ -1,0 +1,143 @@
+"""Decoupled encode pipeline benchmark (ISSUE 2 tentpole metric).
+
+Measures what splitting preprocess+encode out of the prefill path buys:
+
+  * overlap on vs off — encode chunks pipelined with LLM prefill/decode
+    (max-composition up to ``CostModel.overlap_efficiency``) against the
+    serialized ablation; motorcycles under the MH mix must see lower mean
+    TTFT with overlap on (the acceptance gate).
+  * encoder cache — a duplicate-heavy mix (``duplicate_prob``) with the
+    content-hash cache on vs off: hit rate, TTFT deltas, identical decoded
+    work.
+
+Everything here is *simulated* time on fixed seeds, so the numbers are
+deterministic — ``BENCH_encode.json`` (written by the full mode) is an
+exact baseline that benchmarks/check_regression.py re-derives and compares
+with a small float tolerance on every CI run. ``--fast`` runs the same
+configuration but skips writing the baseline.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row, stack
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor
+from repro.serving.metrics import summarize, ttft_components
+from repro.serving.workload import WorkloadConfig, generate
+
+MODEL = "llava-7b"
+POLICY = "tcm"
+NUM_REQUESTS = 300
+SEED = 7
+RATE = 2.5
+DUPLICATE_PROB = 0.35
+BASELINE_PATH = Path(__file__).resolve().parent.parent / "BENCH_encode.json"
+
+
+def _engine_run(classifier, cm, wl_cfg, *, overlap=True, cache=True):
+    ex = SimExecutor(cm, overlap=overlap)
+    eng = Engine(make_policy(POLICY), ex, classifier,
+                 EngineConfig(token_budget=512, encoder_cache=cache))
+    done = eng.run(generate(wl_cfg))
+    return done, eng, ex
+
+
+def _summary(done, eng, ex) -> dict:
+    s = summarize(done)
+    comp = ttft_components(done) or {}
+    out = {
+        "ttft_avg": {g: s[g]["ttft_avg"] for g in ("motorcycle", "car",
+                                                   "truck", "overall")
+                     if s[g] is not None},
+        "sim_time_s": round(eng.now, 4),
+        "iterations": eng.iterations,
+        "encode_seconds": round(ex.encode_seconds, 4),
+        "llm_seconds": round(ex.llm_seconds, 4),
+        "overlap_saved_seconds": round(ex.overlap_saved_seconds, 4),
+        "ttft_components": {k: round(v, 5) for k, v in comp.items()},
+    }
+    if eng.encoder_cache is not None:
+        out["cache"] = eng.encoder_cache.stats()
+    return out
+
+
+def measure() -> dict:
+    """The full (deterministic) measurement dict — shared by main() and
+    the CI regression gate."""
+    base, _, smart, _ = stack(MODEL)
+    cm = base.cm
+    wl = WorkloadConfig(mix="MH", rate=RATE, num_requests=NUM_REQUESTS,
+                        seed=SEED, video_frames_max=96)
+    results: dict = {"meta": {
+        "model": MODEL, "policy": POLICY, "mix": "MH", "rate": RATE,
+        "num_requests": NUM_REQUESTS, "seed": SEED,
+        "duplicate_prob": DUPLICATE_PROB,
+        "note": "simulated time on fixed seeds - deterministic baseline",
+    }}
+
+    on = _summary(*_engine_run(smart, cm, wl, overlap=True))
+    off = _summary(*_engine_run(smart, cm, wl, overlap=False))
+    results["overlap"] = {
+        "on": on, "off": off,
+        "moto_ttft_improvement":
+            1.0 - on["ttft_avg"]["motorcycle"] / off["ttft_avg"]["motorcycle"],
+        "overall_ttft_improvement":
+            1.0 - on["ttft_avg"]["overall"] / off["ttft_avg"]["overall"],
+    }
+
+    wl_dup = WorkloadConfig(mix="MH", rate=RATE, num_requests=NUM_REQUESTS,
+                            seed=SEED, duplicate_prob=DUPLICATE_PROB)
+    hit = _summary(*_engine_run(smart, cm, wl_dup, cache=True))
+    miss = _summary(*_engine_run(smart, cm, wl_dup, cache=False))
+    results["cache"] = {
+        "on": hit, "off": miss,
+        "hit_rate": hit["cache"]["hit_rate"],
+        "overall_ttft_improvement":
+            1.0 - hit["ttft_avg"]["overall"] / miss["ttft_avg"]["overall"],
+    }
+    return results
+
+
+def main(fast: bool = False):
+    rows = []
+    results = measure()
+    ov = results["overlap"]
+    print(f"  overlap on : moto TTFT {ov['on']['ttft_avg']['motorcycle']:.4f}s"
+          f"  overall {ov['on']['ttft_avg']['overall']:.4f}s"
+          f"  (saved {ov['on']['overlap_saved_seconds']:.1f}s encode behind"
+          f" {ov['on']['llm_seconds']:.1f}s LLM)")
+    print(f"  overlap off: moto TTFT {ov['off']['ttft_avg']['motorcycle']:.4f}s"
+          f"  overall {ov['off']['ttft_avg']['overall']:.4f}s")
+    print(f"  -> motorcycle TTFT improvement {ov['moto_ttft_improvement']:.1%}"
+          f", overall {ov['overall_ttft_improvement']:.1%}")
+    assert ov["moto_ttft_improvement"] > 0, \
+        "encode/prefill overlap must lower motorcycle TTFT on the MH mix"
+    rows.append(csv_row("encode_overlap/moto_ttft_on",
+                        ov["on"]["ttft_avg"]["motorcycle"]))
+    rows.append(csv_row("encode_overlap/moto_ttft_off",
+                        ov["off"]["ttft_avg"]["motorcycle"]))
+    rows.append(csv_row("encode_overlap/moto_ttft_improvement",
+                        ov["moto_ttft_improvement"], "overlap on vs off"))
+
+    ca = results["cache"]
+    print(f"  encoder cache (dup={DUPLICATE_PROB}): hit rate "
+          f"{ca['hit_rate']:.1%}, overall TTFT "
+          f"{ca['on']['ttft_avg']['overall']:.4f}s vs "
+          f"{ca['off']['ttft_avg']['overall']:.4f}s without "
+          f"({ca['overall_ttft_improvement']:+.1%})")
+    rows.append(csv_row("encode_overlap/cache_hit_rate", ca["hit_rate"]))
+    rows.append(csv_row("encode_overlap/cache_overall_ttft_improvement",
+                        ca["overall_ttft_improvement"]))
+
+    if not fast:
+        BASELINE_PATH.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"  baseline written to {BASELINE_PATH.name}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

@@ -1,6 +1,5 @@
 """Paper Fig. 9: Priority Regulator curves — priority growth and scheduling
 score (-log priority) vs waiting time, with the paper's constants."""
-import numpy as np
 
 from repro.core.regulator import PriorityRegulator
 from repro.serving.request import VehicleClass

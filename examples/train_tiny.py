@@ -4,7 +4,6 @@ checkpoint save + resume.
 
   PYTHONPATH=src python examples/train_tiny.py [--steps 200]
 """
-import argparse
 import sys
 
 sys.argv = [sys.argv[0], "--arch", "xlstm-125m",

@@ -30,7 +30,6 @@ def _features(prefill: np.ndarray, kv: np.ndarray) -> np.ndarray:
 def kmeans(x: jnp.ndarray, k: int = 3, iters: int = 50,
            seed: int = 0) -> jnp.ndarray:
     """Lloyd's algorithm under lax.scan; k-means++-ish spread init."""
-    n = x.shape[0]
     # init: spread over the feature range by quantile (deterministic)
     qs = jnp.linspace(0.05, 0.95, k)
     init = jnp.quantile(x, qs, axis=0)

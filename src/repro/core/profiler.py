@@ -11,7 +11,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.serving.request import Modality, Request
+from repro.serving.request import Request
 
 
 @dataclass

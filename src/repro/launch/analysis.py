@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.models.config import (ATTN, ATTN_L, ATTN_MOE, DEC_ATTN, ENC_ATTN,
+from repro.models.config import (ATTN, ATTN_L, ATTN_MOE, DEC_ATTN,
                                  MAMBA, MAMBA_MOE, MLSTM, MOE_BLOCKS, SLSTM,
                                  ModelConfig)
 from repro.models.params import param_count

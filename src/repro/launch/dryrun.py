@@ -14,8 +14,6 @@ Usage:
 Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
 """
 import argparse
-import dataclasses
-import functools
 import json
 import re
 import time
@@ -28,8 +26,7 @@ from repro.configs import ALIASES, get_config
 from repro.launch.mesh import make_production_mesh, make_rules
 from repro.models import transformer as T
 from repro.models.config import pad_for_tp
-from repro.models.params import (abstract_params, param_count, param_pspecs,
-                                 tree_map_decls)
+from repro.models.params import abstract_params, param_count, param_pspecs
 from repro.models.sharding import use_rules
 from repro.train.loop import abstract_train_state, train_step
 from repro.train.optimizer import AdamWState

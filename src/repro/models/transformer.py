@@ -10,7 +10,6 @@ one CPU core.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

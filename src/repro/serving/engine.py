@@ -2,16 +2,22 @@
 scheduling policy — the substrate TCM-Serve plugs into.
 
 Per iteration (vLLM V1 semantics with chunked prefill):
-  1. ingest arrivals: classify (estimator+classifier), assign SLO, enqueue;
-  2. the policy orders waiting+preempted requests; the engine admits them
-     under the iteration token budget (decode tokens first, then prefill
-     chunks) and the KV page allocator; under memory pressure the policy
-     picks preemption victims (recompute-style eviction, as vLLM);
+  1. ingest arrivals: classify (estimator+classifier), assign SLO, enqueue —
+     multimodal requests whose encoder output is not already cached enter
+     the ENCODING stage (their own modality-aware queue) instead of the
+     prefill queue;
+  2. the encode plan draws encoding requests in policy rank order under a
+     per-iteration patch budget (chunked, so a rock's encode is preemptible
+     at chunk boundaries); the prefill plan orders waiting+preempted
+     requests and admits them under the iteration token budget and the KV
+     page allocator; under memory pressure the policy picks preemption
+     victims (recompute-style eviction, as vLLM);
   3. the executor runs the batch (sim cost model or real JAX) and the clock
-     advances; a request's preprocess+encode stage runs with its first
-     prefill chunk (paper Fig. 6 TTFT decomposition);
-  4. requests finishing prefill emit their first token that iteration
-     (TTFT); decoding requests emit one token per iteration.
+     advances; encode chunks overlap with LLM prefill/decode (max- rather
+     than sum-composition of stage times, RServe-style);
+  4. encode-complete requests move to the prefill queue; requests finishing
+     prefill emit their first token that iteration (TTFT); decoding
+     requests emit one token per iteration.
 
 Scheduling bookkeeping is incremental (DESIGN.md §Incremental scheduling
 core): the waiting set lives in a ``WaitingIndex`` consumed lazily in rank
@@ -30,6 +36,7 @@ from dataclasses import dataclass, field
 from repro.cache import BlockAllocator, OutOfPages
 from repro.core.queues import QueueManager
 from repro.core.scheduler import SchedulerPolicy
+from repro.serving.encoder_cache import EncoderCache
 from repro.serving.request import Request, State, VehicleClass
 
 
@@ -46,6 +53,15 @@ class EngineConfig:
     # iteration so their inter-token latency stays near isolated speed.
     decode_priority: bool = False
     decode_priority_frac: float = 0.6
+    # decoupled vision-encode stage (ISSUE 2): per-iteration encode budget
+    # in mm units (patches) — a rock's encode yields at chunk boundaries
+    # instead of monopolizing the iteration. ~2048 patches costs about as
+    # much as a full 512-token prefill budget on the calibrated model.
+    encode_budget: int = 2048
+    # encoder-output cache ("pebble cache"): dedup repeated mm inputs by
+    # content hash; a hit skips the ENCODING stage entirely
+    encoder_cache: bool = True
+    encoder_cache_entries: int = 256
     # seed's brute-force planning (full re-sort + per-token allocate):
     # the decision-equivalence oracle and host-overhead baseline
     legacy_scheduling: bool = False
@@ -59,6 +75,10 @@ class Engine:
     config: EngineConfig = field(default_factory=EngineConfig)
 
     def __post_init__(self):
+        if self.config.encode_budget <= 0:
+            # a zero budget would strand ENCODING requests forever (the
+            # run loop would spin empty iterations until max_iters)
+            raise ValueError("encode_budget must be positive")
         self.allocator = BlockAllocator(self.config.kv_pages,
                                         self.config.page_size)
         self.queues = QueueManager()
@@ -70,11 +90,19 @@ class Engine:
         self.finished: list[Request] = []
         self.rejected: list[Request] = []          # admission control
         self.iterations = 0
+        # decoupled encode stage: its own per-class queue manager; ordering
+        # reuses the policy's WaitingIndex on the fast path
+        self.encode_queues = QueueManager()
+        self.encoder_cache = (EncoderCache(self.config.encoder_cache_entries)
+                              if self.config.encoder_cache else None)
         if self.config.legacy_scheduling:
             self.wait_index = None
+            self.encode_index = None
         else:
             self.wait_index = self.policy.make_waiting_index()
             self.queues.listener = self.wait_index
+            self.encode_index = self.policy.make_waiting_index()
+            self.encode_queues.listener = self.encode_index
         self._victim_view = None
         self._victim_view_now = None
 
@@ -109,8 +137,25 @@ class Engine:
                 req.state = State.REJECTED
                 self.rejected.append(req)
                 continue
-            self.queues.push(req, self.now)
+            # multimodal requests encode before they can prefill; a cached
+            # encoder output (same content hash) skips the stage entirely
+            if req.mm_units > 0 and not self._encode_cached(req):
+                req.state = State.ENCODING
+                self.encode_queues.push(req, self.now)
+            else:
+                self.queues.push(req, self.now)
         return i
+
+    def _encode_cached(self, req: Request) -> bool:
+        """Encoder-cache lookup at ingest; a hit marks the request
+        fully encoded. Requests without a content hash bypass the cache."""
+        if self.encoder_cache is None or req.mm_hash is None:
+            return False
+        if not self.encoder_cache.lookup(req.mm_hash):
+            return False
+        req.encode_cache_hit = True
+        req.encoded_units = req.mm_units
+        return True
 
     # ------------------------------------------------------------------
     def _victims(self):
@@ -171,6 +216,8 @@ class Engine:
         if req.preempted_at is not None:
             req.preempted_time += self.now - req.preempted_at
             req.preempted_at = None
+        if req.admit_time is None:
+            req.admit_time = self.now
         req.state = State.PREFILLING
         self.prefilling[req] = None
         if self._victim_view is not None and \
@@ -180,7 +227,9 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _plan(self):
-        """Pick this iteration's decode batch + prefill chunks."""
+        """Pick this iteration's encode chunks, decode batch + prefill
+        chunks."""
+        encode_work = self._plan_encode()
         budget = self.config.token_budget
         decode_batch = list(self.running)
         budget -= len(decode_batch)
@@ -191,10 +240,48 @@ class Engine:
             budget = min(budget, int(self.config.token_budget *
                                      self.config.decode_priority_frac))
         if self.config.legacy_scheduling:
-            prefill_work, encode_batch = self._plan_prefill_legacy(budget)
+            prefill_work = self._plan_prefill_legacy(budget)
         else:
-            prefill_work, encode_batch = self._plan_prefill(budget)
-        return prefill_work, decode_batch, encode_batch
+            prefill_work = self._plan_prefill(budget)
+        return prefill_work, decode_batch, encode_work
+
+    def _plan_encode(self) -> list[tuple[Request, int]]:
+        """Draw encoding requests in policy rank order and hand out encode
+        chunks under the per-iteration patch budget. Nothing is held
+        across iterations (no KV is allocated while encoding), so a
+        higher-priority arrival simply takes the next iteration's budget
+        first — rock encodes are preemptible at every chunk boundary."""
+        budget = self.config.encode_budget
+        work: list[tuple[Request, int]] = []
+        if budget <= 0 or not len(self.encode_queues):
+            return work
+        if self.config.legacy_scheduling:
+            ordered = self.policy.order(
+                [r for r in self.encode_queues.peek_all()
+                 if r.ready_at <= self.now], self.now)
+            for req in ordered:
+                if budget <= 0:
+                    break
+                chunk = min(budget, req.mm_units - req.encoded_units)
+                if chunk > 0:
+                    work.append((req, chunk))
+                    budget -= chunk
+            return work
+        idx = self.encode_index
+        idx.begin_plan(self.now)
+        try:
+            while budget > 0:
+                head = idx.next_candidate(self.now)
+                if head is None:
+                    break
+                req = head[1]
+                chunk = min(budget, req.mm_units - req.encoded_units)
+                if chunk > 0:
+                    work.append((req, chunk))
+                    budget -= chunk
+        finally:
+            idx.end_plan()
+        return work
 
     def _plan_prefill(self, budget: int):
         """One policy-ordered pass over BOTH in-flight prefills and waiting
@@ -208,9 +295,8 @@ class Engine:
         prefilling set. Ties resolve prefilling-first, exactly like the
         seed's stable sort over [prefilling] + [waiting]."""
         prefill_work: list[tuple[Request, int]] = []
-        encode_batch: list[Request] = []
         if budget <= 0:
-            return prefill_work, encode_batch
+            return prefill_work
         policy, now, cap = self.policy, self.now, self.config.max_num_seqs
         pre = sorted((policy.rank(r, now), i, r)
                      for i, r in enumerate(self.prefilling))
@@ -244,23 +330,19 @@ class Engine:
                             continue
                 else:
                     break
-                if not req.stage_done:
-                    encode_batch.append(req)
-                    req.stage_done = True
                 chunk = min(budget, req.prompt_tokens - req.prefilled)
                 if chunk > 0:
                     prefill_work.append((req, chunk))
                     budget -= chunk
         finally:
             idx.end_plan()
-        return prefill_work, encode_batch
+        return prefill_work
 
     def _plan_prefill_legacy(self, budget: int):
         """Seed behaviour: re-sort the full candidate set every iteration
         (the host-overhead baseline the incremental path is measured
         against; decisions are identical)."""
         prefill_work: list[tuple[Request, int]] = []
-        encode_batch: list[Request] = []
         candidates = self.policy.order(
             list(self.prefilling) +
             [r for r in self.queues.peek_all() if r.ready_at <= self.now],
@@ -274,14 +356,11 @@ class Engine:
                     continue
                 if not self._admit(req):
                     continue
-            if not req.stage_done:
-                encode_batch.append(req)
-                req.stage_done = True
             chunk = min(budget, req.prompt_tokens - req.prefilled)
             if chunk > 0:
                 prefill_work.append((req, chunk))
                 budget -= chunk
-        return prefill_work, encode_batch
+        return prefill_work
 
     # ------------------------------------------------------------------
     def _grow_kv(self, req: Request, total_tokens: int) -> bool:
@@ -312,25 +391,43 @@ class Engine:
 
     def _step_core(self, pending: list[Request], start: int) -> int:
         start = self._ingest(pending, start)
-        if not (self.running or self.prefilling or len(self.queues)):
+        if not (self.running or self.prefilling or len(self.queues)
+                or len(self.encode_queues)):
             if start < len(pending):  # idle: jump to next arrival
                 self.now = max(self.now, pending[start].arrival)
                 start = self._ingest(pending, start)
             else:
                 return start
 
-        prefill_work, decode_batch, encode_batch = self._plan()
-        if not (prefill_work or decode_batch or encode_batch) \
-                and len(self.queues):
+        prefill_work, decode_batch, encode_work = self._plan()
+        if not (prefill_work or decode_batch or encode_work) \
+                and (len(self.queues) or len(self.encode_queues)):
             # everything is waiting on async preprocess: jump ahead
-            nxt = min(r.ready_at for r in self.queues.peek_all())
+            nxt = min(r.ready_at for r in self.queues.peek_all()
+                      + self.encode_queues.peek_all())
             self.now = max(self.now, nxt)
-            prefill_work, decode_batch, encode_batch = self._plan()
+            prefill_work, decode_batch, encode_work = self._plan()
+        plan_now = self.now
         duration = self.executor.run_iteration(prefill_work, decode_batch,
-                                               encode_batch)
+                                               encode_work)
         self.now += duration
         self.iterations += 1
 
+        cache = self.encoder_cache
+        for req, units in encode_work:
+            if req.encode_start_time is None:
+                req.encode_start_time = plan_now
+            req.encoded_units += units
+            if req.encoded_units >= req.mm_units:
+                # encode complete: leave the encode queue, enter the
+                # prefill queue; the freshly-encoded output becomes
+                # cacheable for later duplicates
+                req.encode_finish_time = self.now
+                self.encode_queues.remove(req)
+                if cache is not None and req.mm_hash is not None:
+                    cache.insert(req.mm_hash, req.mm_units)
+                req.state = State.WAITING
+                self.queues.push(req, self.now)
         for req, chunk in prefill_work:
             if req not in self.prefilling:
                 continue  # preempted later in the same planning pass

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .request import Request, VehicleClass
+from .request import Request
 
 GROUPS = ("motorcycle", "car", "truck", "overall")
 
@@ -28,6 +28,9 @@ def summarize(reqs: list[Request]) -> dict:
                          if r.norm_latency() is not None])
         viol = np.array([r.slo_violated() for r in rs])
         sev = np.array([r.violation_severity() for r in rs if r.slo_violated()])
+        mm = [r for r in rs if r.mm_units > 0]
+        enc_waits = [bd["encode_wait"] for r in mm
+                     if (bd := r.ttft_breakdown()) is not None]
         out[g] = {
             "n": len(rs),
             "ttft_avg": float(ttft.mean()) if len(ttft) else float("nan"),
@@ -37,8 +40,24 @@ def summarize(reqs: list[Request]) -> dict:
             "violation_severity_avg": float(sev.mean()) if len(sev) else 0.0,
             "preemptions": int(sum(r.preemptions for r in rs)),
             "preempted_time": float(sum(r.preempted_time for r in rs)),
+            # decoupled encode stage (mm requests only)
+            "encode_wait_avg": (float(np.mean(enc_waits)) if enc_waits
+                                else 0.0),
+            "encode_cache_hit_rate": (sum(r.encode_cache_hit for r in mm)
+                                      / len(mm) if mm else 0.0),
         }
     return out
+
+
+def ttft_components(reqs: list[Request]) -> dict[str, float] | None:
+    """Mean per-stage TTFT decomposition over finished requests: where did
+    the time to first token actually go (encode-wait vs prefill-wait vs
+    queue-wait; benchmarks/ttft_breakdown.py)."""
+    parts = [bd for r in reqs if (bd := r.ttft_breakdown()) is not None]
+    if not parts:
+        return None
+    n = len(parts)
+    return {k: sum(p[k] for p in parts) / n for k in parts[0]}
 
 
 def goodput(reqs: list[Request], duration: float | None = None) -> float:

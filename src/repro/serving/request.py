@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 class Modality(str, enum.Enum):
@@ -25,6 +25,7 @@ class VehicleClass(str, enum.Enum):
 
 class State(str, enum.Enum):
     WAITING = "waiting"
+    ENCODING = "encoding"       # in the vision-encode queue (mm_units > 0)
     PREFILLING = "prefilling"   # admitted; chunked prefill in progress
     RUNNING = "running"         # decoding
     PREEMPTED = "preempted"
@@ -41,6 +42,8 @@ class Request:        # engine's running/prefilling sets (rids are unique)
     text_tokens: int
     mm_units: int = 0          # image patches or video frames (0 for text)
     output_tokens: int = 32    # decode length target
+    mm_hash: str | None = None  # content hash of the mm input (encoder-cache
+    #                             key; None = uncacheable / no mm payload)
 
     # ---- derived / filled by the pipeline ----
     prompt_tokens: int = 0     # total LLM prompt tokens (text + mm embeds)
@@ -58,9 +61,13 @@ class Request:        # engine's running/prefilling sets (rids are unique)
     prefilled: int = 0         # prompt tokens prefilled so far
     decoded: int = 0
     enqueue_time: float = 0.0  # when (re-)entered the waiting queue
-    stage_done: bool = False   # preprocess+encode done
+    encoded_units: int = 0     # mm units encoded so far (chunked encode)
+    encode_cache_hit: bool = False  # encoder output served from the cache
 
     # ---- metrics ----
+    encode_start_time: float | None = None   # first encode chunk scheduled
+    encode_finish_time: float | None = None  # last encode chunk completed
+    admit_time: float | None = None          # first admission to prefilling
     first_token_time: float | None = None
     finish_time: float | None = None
     preemptions: int = 0
@@ -97,3 +104,32 @@ class Request:        # engine's running/prefilling sets (rids are unique)
 
     def waiting_time(self, now: float) -> float:
         return max(0.0, now - self.enqueue_time)
+
+    def ttft_breakdown(self) -> dict | None:
+        """TTFT split into pipeline stages (paper Fig. 6, but measured on
+        the live engine rather than isolated runs): preprocess, encode
+        queue wait, encode, prefill queue wait, and prefill — the prefill
+        term absorbs preemption/requeue time after the first admission."""
+        if self.first_token_time is None:
+            return None
+        pre = max(0.0, self.ready_at - self.arrival)
+        if self.encode_start_time is not None:
+            enc_end = self.encode_finish_time
+            if enc_end is None:
+                enc_end = self.encode_start_time
+            enc_wait = max(0.0, self.encode_start_time - self.ready_at)
+            enc = max(0.0, enc_end - self.encode_start_time)
+            queued_from = enc_end
+        else:  # text-only, or encoder-cache hit (encode skipped entirely)
+            enc_wait = enc = 0.0
+            queued_from = self.ready_at
+        admit = self.admit_time
+        if admit is None:
+            admit = self.first_token_time
+        return {
+            "preprocess": pre,
+            "encode_wait": enc_wait,
+            "encode": enc,
+            "queue_wait": max(0.0, admit - queued_from),
+            "prefill": max(0.0, self.first_token_time - admit),
+        }

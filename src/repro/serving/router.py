@@ -13,7 +13,7 @@ The router assigns requests at arrival:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.scheduler import make_policy
 from repro.serving.engine import Engine, EngineConfig
@@ -39,8 +39,12 @@ class Router:
     def _route(self, req: Request) -> int:
         n = len(self.engines)
         if self.routing == "round-robin":
+            # return the current cursor, THEN advance — incrementing first
+            # skipped replica 0 on the first assignment and started every
+            # run load-skewed
+            i = self._rr
             self._rr = (self._rr + 1) % n
-            return self._rr
+            return i
         vclass, est_prefill, _ = self.classifier.classify(
             req.modality.value, req.text_tokens, req.mm_units)
         if self.routing == "least-loaded":

@@ -42,6 +42,11 @@ class WorkloadConfig:
     video_patches_per_frame: int = 196
     out_tokens_log_mu: float = 4.2      # ~67 median output tokens
     out_tokens_log_sigma: float = 0.8
+    # P(an mm input repeats an earlier one of the same modality) —
+    # exercises the engine's encoder-output cache. 0.0 keeps the RNG
+    # stream identical to the historical generator (seeded workloads and
+    # committed baselines are unchanged).
+    duplicate_prob: float = 0.0
 
 
 def generate(cfg: WorkloadConfig) -> list[Request]:
@@ -54,27 +59,38 @@ def generate(cfg: WorkloadConfig) -> list[Request]:
     arrivals = np.cumsum(gaps)
 
     reqs = []
+    # previously-generated mm contents per modality: (hash, units) pools
+    # that duplicate_prob draws from (the same image re-asked with a new
+    # question shares the hash AND the patch count — content identity)
+    pools: dict[str, list[tuple[str, int]]] = {"image": [], "video": []}
     for i, (mod, t) in enumerate(zip(modalities, arrivals)):
         out_toks = int(np.clip(rng.lognormal(
             cfg.out_tokens_log_mu, cfg.out_tokens_log_sigma), 4, 1024))
+        mm_hash = None
         if mod == "text":
             text = int(np.clip(rng.lognormal(
                 cfg.text_tokens_log_mu, cfg.text_tokens_log_sigma), 10, 10000))
             mm = 0
-        elif mod == "image":
+        else:
             text = int(np.clip(rng.lognormal(3.6, 0.6), 8, 256))
-            mm = int(cfg.image_patches *
-                     (1 + rng.uniform(-cfg.image_patch_jitter,
-                                      cfg.image_patch_jitter)))
-        else:  # video
-            text = int(np.clip(rng.lognormal(3.6, 0.6), 8, 256))
-            frames = int(rng.integers(cfg.video_frames_min,
-                                      cfg.video_frames_max + 1))
-            mm = frames * cfg.video_patches_per_frame
+            if cfg.duplicate_prob > 0 and pools[mod] and \
+                    rng.uniform() < cfg.duplicate_prob:
+                mm_hash, mm = pools[mod][int(rng.integers(len(pools[mod])))]
+            else:
+                if mod == "image":
+                    mm = int(cfg.image_patches *
+                             (1 + rng.uniform(-cfg.image_patch_jitter,
+                                              cfg.image_patch_jitter)))
+                else:  # video
+                    frames = int(rng.integers(cfg.video_frames_min,
+                                              cfg.video_frames_max + 1))
+                    mm = frames * cfg.video_patches_per_frame
+                mm_hash = f"{mod}-{i:05d}"
+                pools[mod].append((mm_hash, mm))
         reqs.append(Request(
             rid=f"r{i:05d}", modality=Modality(mod), arrival=float(t),
             text_tokens=text, mm_units=mm, output_tokens=out_toks,
-            prompt_tokens=text + mm))
+            prompt_tokens=text + mm, mm_hash=mm_hash))
     return reqs
 
 

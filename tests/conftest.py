@@ -1,11 +1,34 @@
 """Test configuration.
 
-Provides a minimal seeded-random fallback for ``hypothesis`` when the real
-package is absent, covering exactly the API surface these tests use
-(``given``, ``settings``, and the ``strategies`` constructors). When the
-real hypothesis is installed it is used unchanged.
+Provides the shared sim-stack cache (one expensive profiler/estimator
+build per test session, usable both as the ``sim_stack`` fixture and —
+for ``@given`` tests, which the shim below runs without fixture support —
+via the plain ``sim_stack_cached()`` helper), plus a minimal
+seeded-random fallback for ``hypothesis`` when the real package is
+absent, covering exactly the API surface these tests use (``given``,
+``settings``, and the ``strategies`` constructors). When the real
+hypothesis is installed it is used unchanged.
 """
 import sys
+
+import pytest
+
+_SIM_STACK = None
+
+
+def sim_stack_cached():
+    """(executor, classifier, engine_cfg, profile, estimator), built once."""
+    global _SIM_STACK
+    if _SIM_STACK is None:
+        from repro.launch.serve import build_stack
+        _SIM_STACK = build_stack("chatglm3-6b", "sim",
+                                 model_preset="llava-7b")
+    return _SIM_STACK
+
+
+@pytest.fixture(scope="session")
+def sim_stack():
+    return sim_stack_cached()
 
 try:
     import hypothesis  # noqa: F401  (real package wins when available)

@@ -6,15 +6,14 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.classifier import CLASS_ORDER, NaiveClassifier, SmartClassifier
+from repro.core.classifier import NaiveClassifier, SmartClassifier
 from repro.core.estimator import ImpactEstimator, fit_linreg, fit_quantile
 from repro.core.profiler import WorkloadProfiler
-from repro.core.regulator import PAPER_PARAMS, PriorityRegulator
+from repro.core.regulator import PriorityRegulator
 from repro.core.scheduler import make_policy
 from repro.serving.executors import SimExecutor, make_cost_model
 from repro.serving.request import Modality, Request, VehicleClass
-from repro.serving.workload import WorkloadConfig, generate, \
-    profiling_workload
+from repro.serving.workload import profiling_workload
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,217 @@
+"""Decoupled vision-encode pipeline tests (ISSUE 2 tentpole).
+
+Properties enforced:
+  * time accounting conserves work — chunked encode sums to exactly the
+    unchunked encode cost, and iteration durations decompose into
+    llm + encode - overlap_saved;
+  * the encoder cache never changes outputs (identical finished sets and
+    decoded token counts) and only improves mean TTFT;
+  * fast-path scheduling decisions stay bit-identical to
+    ``legacy_scheduling`` on multimodal mixes exercising the encode queue,
+    chunking, and the cache.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import make_policy
+from repro.serving.encoder_cache import EncoderCache
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor
+from repro.serving.request import Modality, Request, State
+from repro.serving.workload import WorkloadConfig, generate
+
+from conftest import sim_stack_cached as _sim_stack
+
+
+def _engine(policy="tcm", *, overlap=True, cache=True, legacy=False,
+            encode_budget=2048, token_budget=512, kv_pages=24576):
+    executor, classifier, _, _, _ = _sim_stack()
+    ex = SimExecutor(executor.cm, overlap=overlap)
+    eng = Engine(make_policy(policy), ex, classifier,
+                 EngineConfig(token_budget=token_budget, kv_pages=kv_pages,
+                              encode_budget=encode_budget,
+                              encoder_cache=cache,
+                              legacy_scheduling=legacy))
+    return eng, ex
+
+
+def _fingerprint(done):
+    return [(r.rid, r.first_token_time, r.finish_time, r.preemptions,
+             r.encode_finish_time, r.encode_cache_hit) for r in done]
+
+
+# ---------------- pipeline stages -------------------------------------------
+
+
+def test_mm_request_flows_through_encoding_state():
+    eng, _ = _engine(encode_budget=500, cache=False)
+    video = Request(rid="v0", modality=Modality.VIDEO, arrival=0.0,
+                    text_tokens=16, mm_units=1960, output_tokens=4,
+                    prompt_tokens=1976)
+    pending = [video]
+    saw_encoding = False
+    for _ in range(100):
+        pending = eng.step(pending)
+        saw_encoding |= video.state is State.ENCODING
+        if video.state is State.FINISHED:
+            break
+    assert video.state is State.FINISHED
+    assert saw_encoding, "mm request never entered the ENCODING stage"
+    # budgeted chunking: 1960 units at 500/iter -> 4 encode iterations
+    assert video.encoded_units == 1960
+    assert video.encode_start_time is not None
+    assert video.encode_finish_time >= video.encode_start_time
+    assert video.encode_finish_time <= video.admit_time
+    bd = video.ttft_breakdown()
+    assert bd["encode"] > 0
+    assert video.ttft() == pytest.approx(sum(bd.values()))
+
+
+def test_nonpositive_encode_budget_rejected():
+    """A zero/negative budget would strand ENCODING requests forever."""
+    executor, classifier, _, _, _ = _sim_stack()
+    with pytest.raises(ValueError):
+        Engine(make_policy("tcm"), executor, classifier,
+               EngineConfig(encode_budget=0))
+
+
+def test_text_requests_skip_encode_queue():
+    eng, _ = _engine()
+    txt = Request(rid="t0", modality=Modality.TEXT, arrival=0.0,
+                  text_tokens=64, prompt_tokens=64, output_tokens=4)
+    done = eng.run([txt])
+    assert done and txt.encode_start_time is None
+    assert len(eng.encode_queues) == 0
+    bd = txt.ttft_breakdown()
+    assert bd["encode"] == bd["encode_wait"] == 0.0
+
+
+# ---------------- work conservation -----------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000), budget=st.sampled_from([256, 2048, 8192]))
+def test_encode_accounting_conserves_work(seed, budget):
+    """Chunked encode must sum to exactly the unchunked per-request encode
+    cost (no work lost or invented at chunk boundaries), and the engine
+    clock must decompose into the executor's stage counters."""
+    eng, ex = _engine(cache=False, encode_budget=budget)
+    done = eng.run(generate(WorkloadConfig(mix="MH", rate=3.0,
+                                           num_requests=60, seed=seed)))
+    expected = sum(ex.cm.encode_time(r) for r in done if r.mm_units > 0)
+    assert ex.encode_seconds == pytest.approx(expected, rel=1e-9)
+    assert ex.busy_seconds >= \
+        ex.llm_seconds + ex.encode_seconds - ex.overlap_saved_seconds - 1e-9
+    assert ex.overlap_saved_seconds <= \
+        ex.cm.overlap_efficiency * min(ex.llm_seconds, ex.encode_seconds)
+
+
+def test_no_overlap_serializes_stages():
+    eng, ex = _engine(overlap=False, cache=False)
+    eng.run(generate(WorkloadConfig(mix="MH", rate=3.0, num_requests=40,
+                                    seed=5)))
+    assert ex.overlap_saved_seconds == 0.0
+    assert ex.encode_seconds > 0
+
+
+def test_overlap_improves_mean_ttft():
+    wl = WorkloadConfig(mix="MH", rate=2.5, num_requests=120, seed=7,
+                        video_frames_max=96)
+    ttfts = {}
+    for overlap in (True, False):
+        eng, _ = _engine(overlap=overlap, cache=False)
+        done = eng.run(generate(wl))
+        ttfts[overlap] = sum(r.ttft() for r in done) / len(done)
+    assert ttfts[True] < ttfts[False]
+
+
+# ---------------- encoder cache ---------------------------------------------
+
+
+def test_encoder_cache_lru_and_stats():
+    c = EncoderCache(capacity=2)
+    assert not c.lookup("a")
+    c.insert("a", 10)
+    c.insert("b", 20)
+    assert c.lookup("a")          # refreshes a's recency
+    c.insert("c", 30)             # evicts b (LRU)
+    assert "b" not in c and "a" in c and "c" in c
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 1 and s["evictions"] == 1
+    with pytest.raises(ValueError):
+        EncoderCache(capacity=0)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.sampled_from(list(range(8))))  # bounded: every seed verified
+def test_cache_hits_never_change_outputs_ttft_only_improves(seed):
+    wl = WorkloadConfig(mix="MH", rate=2.5, num_requests=80, seed=seed,
+                        duplicate_prob=0.5)
+    runs = {}
+    for cache in (True, False):
+        eng, _ = _engine(cache=cache)
+        done = eng.run(generate(wl))
+        runs[cache] = (eng, done)
+    eng_on, done_on = runs[True]
+    _, done_off = runs[False]
+    # outputs unchanged: same finished set, same decoded work per request
+    assert {r.rid for r in done_on} == {r.rid for r in done_off}
+    assert {r.rid: r.decoded for r in done_on} == \
+        {r.rid: r.decoded for r in done_off}
+    # TTFT only improves in aggregate, and strictly for the hit requests
+    mean_on = sum(r.ttft() for r in done_on) / len(done_on)
+    mean_off = sum(r.ttft() for r in done_off) / len(done_off)
+    assert mean_on <= mean_off * (1 + 1e-9)
+    hits = [r for r in done_on if r.encode_cache_hit]
+    if hits:
+        off_by_rid = {r.rid: r for r in done_off}
+        hit_on = sum(r.ttft() for r in hits) / len(hits)
+        hit_off = sum(off_by_rid[r.rid].ttft() for r in hits) / len(hits)
+        assert hit_on <= hit_off * (1 + 1e-9)
+        assert eng_on.encoder_cache.hits >= len(hits)
+        for r in hits:
+            assert r.encode_start_time is None  # encode skipped entirely
+
+
+def test_unhashed_mm_requests_bypass_cache():
+    eng, _ = _engine()
+    r = Request(rid="img", modality=Modality.IMAGE, arrival=0.0,
+                text_tokens=16, mm_units=576, prompt_tokens=592,
+                output_tokens=4)  # mm_hash=None
+    done = eng.run([r])
+    assert done and not r.encode_cache_hit
+    assert eng.encoder_cache.hits == eng.encoder_cache.misses == 0
+    assert len(eng.encoder_cache) == 0
+
+
+# ---------------- fast vs legacy parity on multimodal mixes ------------------
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "edf", "static", "naive-aging",
+                                    "tcm"])
+def test_encode_pipeline_parity_with_legacy(policy):
+    """Chunked encode + cache must not change *scheduling decisions*: the
+    incremental encode queue (WaitingIndex reuse) matches the legacy
+    brute-force ordering bit for bit, duplicates and tiny budgets
+    included."""
+    wl = WorkloadConfig(mix="MH", rate=3.0, num_requests=80, seed=11,
+                        duplicate_prob=0.4)
+    fps = {}
+    for legacy in (False, True):
+        eng, _ = _engine(policy, legacy=legacy, encode_budget=640,
+                         kv_pages=2048)
+        done = eng.run(generate(wl))
+        fps[legacy] = (_fingerprint(done), eng.iterations, eng.now)
+    assert fps[False] == fps[True], \
+        f"{policy}: encode pipeline diverged between fast and legacy paths"
+
+
+def test_encode_index_drains_clean():
+    eng, _ = _engine(encode_budget=512)
+    done = eng.run(generate(WorkloadConfig(mix="MH", rate=4.0,
+                                           num_requests=50, seed=13)))
+    assert len(done) + len(eng.rejected) == 50
+    assert len(eng.encode_queues) == 0
+    assert len(eng.encode_index) == 0
+    assert len(eng.wait_index) == 0

@@ -1,13 +1,12 @@
 """Engine integration + property tests: continuous batching, chunked
 prefill, preemption, allocator safety, end-to-end behaviour."""
-import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.cache.allocator import BlockAllocator, OutOfPages
 from repro.core.scheduler import make_policy
-from repro.launch.serve import build_stack, serve
+from repro.launch.serve import serve
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.metrics import summarize
 from repro.serving.request import State, VehicleClass
@@ -48,11 +47,7 @@ def test_allocator_accounting():
 
 
 # ---------------- engine end-to-end -----------------------------------------
-
-@pytest.fixture(scope="module")
-def sim_stack():
-    return build_stack("chatglm3-6b", "sim", model_preset="llava-7b")
-
+# (the session-cached sim_stack fixture comes from conftest.py)
 
 @pytest.mark.parametrize("policy", ["fcfs", "edf", "static", "naive-aging",
                                     "tcm"])
@@ -129,6 +124,7 @@ def test_requests_conserved_through_engine(sim_stack):
     for _ in range(200000):
         pending = eng.step(pending)
         ids = ([r.rid for r in pending] + [r.rid for r in eng.queues.peek_all()]
+               + [r.rid for r in eng.encode_queues.peek_all()]
                + [r.rid for r in eng.prefilling] + [r.rid for r in eng.running]
                + [r.rid for r in eng.finished])
         assert len(ids) == len(set(ids)) == 50
@@ -157,6 +153,65 @@ def test_engine_with_real_model_executor():
 
 
 # ---------------- multi-replica router ---------------------------------------
+
+def _router(sim_stack, routing, n_replicas=3):
+    from repro.serving.executors import SimExecutor
+    from repro.serving.router import Router
+    executor, classifier, _, _, _ = sim_stack
+    return Router(executors=[SimExecutor(executor.cm)
+                             for _ in range(n_replicas)],
+                  classifier=classifier, engine_cfg=EngineConfig(),
+                  routing=routing)
+
+
+def _mk(rid, modality=None, text=64, mm=0, arrival=0.0):
+    from repro.serving.request import Modality, Request
+    return Request(rid=rid, modality=modality or Modality.TEXT,
+                   arrival=arrival, text_tokens=text, mm_units=mm,
+                   prompt_tokens=text + mm)
+
+
+def test_router_round_robin_starts_at_replica_zero(sim_stack):
+    """Regression: _rr was incremented before returning, so replica 0 was
+    skipped on the first assignment and load started skewed."""
+    router = _router(sim_stack, "round-robin")
+    picks = [router._route(_mk(f"r{i}")) for i in range(7)]
+    assert picks == [0, 1, 2, 0, 1, 2, 0]
+
+
+def test_router_least_loaded_tracks_estimated_prefill(sim_stack):
+    from repro.serving.request import Modality
+    router = _router(sim_stack, "least-loaded")
+    # a heavy video loads replica 0; light texts then fill 1 and 2 first
+    first = router._route(_mk("v", Modality.VIDEO, text=32, mm=196 * 64))
+    assert first == 0
+    assert router._route(_mk("t1")) == 1
+    assert router._route(_mk("t2")) == 2
+    # the video's estimated prefill dominates: replica 0 is picked last
+    assert router._load[0] > router._load[1] > 0
+    nxt = router._route(_mk("t3"))
+    assert nxt in (1, 2) and nxt != 0
+
+
+def test_router_truck_isolation_pools(sim_stack):
+    from repro.serving.request import Modality
+    router = _router(sim_stack, "truck-isolation")  # replica 2 is heavy
+    truck = _mk("truck", Modality.VIDEO, text=32, mm=196 * 96)
+    moto = _mk("moto", text=32)
+    assert router._route(truck) == 2          # trucks pinned to heavy pool
+    assert router._route(moto) in (0, 1)      # motorcycles never on heavy
+    for i in range(20):
+        assert router._route(_mk(f"m{i}", text=32)) != 2
+    for i in range(5):
+        assert router._route(
+            _mk(f"t{i}", Modality.VIDEO, text=32, mm=196 * 96)) == 2
+
+
+def test_router_unknown_policy_raises(sim_stack):
+    router = _router(sim_stack, "no-such-routing")
+    with pytest.raises(ValueError):
+        router._route(_mk("x"))
+
 
 def test_router_conserves_and_isolates(sim_stack):
     from repro.serving.executors import SimExecutor

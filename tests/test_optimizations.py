@@ -8,8 +8,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import transformer as T
-from repro.models.params import init_params, tree_map_decls
-from repro.models.params import ParamDecl
+from repro.models.params import init_params
 
 KEY = jax.random.PRNGKey(0)
 

@@ -13,7 +13,11 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.cache import BlockAllocator, OutOfPages
+# session-cached stack shared with the other serving test modules; the
+# plain-callable form exists because @given tests (the shim has no fixture
+# support) cannot take fixtures
+from conftest import sim_stack_cached as _sim_stack
+
 from repro.core.queues import QueueManager
 from repro.core.scheduler import make_policy
 from repro.serving.engine import Engine, EngineConfig
@@ -179,24 +183,6 @@ def test_victim_view_matches_pick_victim_oracle(seed):
 
 
 # ---------------- engine: legacy vs incremental equivalence ------------------
-
-_STACK = None
-
-
-def _sim_stack():
-    """Module-cached (executor, classifier, ...) stack — a plain helper
-    rather than a fixture so @given tests (shim has no fixture support)
-    can share it."""
-    global _STACK
-    if _STACK is None:
-        from repro.launch.serve import build_stack
-        _STACK = build_stack("chatglm3-6b", "sim", model_preset="llava-7b")
-    return _STACK
-
-
-@pytest.fixture(scope="module")
-def sim_stack():
-    return _sim_stack()
 
 
 def _run(policy, stack, *, legacy, n=120, seed=3, kv_pages=2048,
