@@ -14,6 +14,10 @@ blocking it:
     is generous: the fresh speedup only has to clear a floor derived from
     the committed headline, never match it. Decision equivalence between
     the fast and legacy paths is still asserted exactly (by ``_compare``).
+  * ``BENCH_executor.json`` — real-JAX batched-vs-legacy executor.
+    Token parity and the recompile-signature count are exact gates
+    (they are deterministic); the batch-8 decode speedup is wall-clock,
+    so it only has to clear a generous floor of the committed headline.
 
     PYTHONPATH=src python -m benchmarks.check_regression [--skip-wallclock]
 """
@@ -102,10 +106,53 @@ def check_scheduler_baseline(failures: list[str]) -> None:
                         f"{floor:.2f}x (committed {committed:.2f}x)")
 
 
+def check_executor_baseline(failures: list[str],
+                            skip_wallclock: bool) -> None:
+    path = ROOT / "BENCH_executor.json"
+    if not path.exists():
+        failures.append("BENCH_executor.json missing - run "
+                        "`python -m benchmarks.run --only real_executor`")
+        return
+    baseline = json.loads(path.read_text())
+    from benchmarks.real_executor import measure
+    fresh = measure(fast=True)
+    # exact gates: both are deterministic on any platform
+    parity = fresh["token_parity"]
+    print(f"  executor/token_parity: {parity}  "
+          f"[{'ok' if parity else 'REGRESSION'}]")
+    if not parity:
+        failures.append("executor/token_parity: batched path no longer "
+                        "emits bit-identical tokens to legacy")
+    # one prefill + one decode signature per batch bucket in the fast
+    # run's fixed workload (derived, so changing the batch list does not
+    # desynchronize the gate)
+    want_sigs = 2 * len(fresh["curve"])
+    got_sigs = fresh["recompile_signatures"]
+    sig_ok = got_sigs == want_sigs
+    print(f"  executor/recompile_signatures: fresh {got_sigs}  "
+          f"expected {want_sigs}  [{'ok' if sig_ok else 'REGRESSION'}]")
+    if not sig_ok:
+        failures.append(f"executor/recompile_signatures {got_sigs} != "
+                        f"{want_sigs}: {fresh['recompile_keys']}")
+    if skip_wallclock:
+        return
+    committed = baseline["curve"]["8"]["speedup"]
+    floor = max(WALLCLOCK_FLOOR, 0.25 * committed)
+    got = fresh["curve"]["8"]["speedup"]
+    status = "ok" if got >= floor else "REGRESSION"
+    print(f"  executor/b8_speedup: committed {committed:.2f}x, fresh "
+          f"fast-smoke {got:.2f}x, floor {floor:.2f}x  [{status}]")
+    if status != "ok":
+        failures.append(f"executor/b8_speedup {got:.2f}x below floor "
+                        f"{floor:.2f}x (committed {committed:.2f}x)")
+
+
 def main(argv: list[str]) -> int:
     failures: list[str] = []
     print("== perf regression gate ==")
     check_encode_baseline(failures)
+    check_executor_baseline(failures,
+                            skip_wallclock="--skip-wallclock" in argv)
     if "--skip-wallclock" not in argv:
         check_scheduler_baseline(failures)
     if failures:

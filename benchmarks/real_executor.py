@@ -1,0 +1,137 @@
+"""Batched paged-KV execution path vs the sequential legacy oracle.
+
+Measures real-JAX decode/prefill wall-clock on CPU for the reduced model at
+batch 1/4/8/16: the batched path runs each iteration as one jit-compiled
+fused decode step (paged KV, block tables) while ``legacy=True`` replays
+the seed's one-eager-``forward``-per-request loop. Token parity between the
+two paths is asserted bit-for-bit, and jit recompiles are counted from the
+bucket signatures (powers of two over batch/chunk) and asserted bounded.
+
+Full mode writes ``BENCH_executor.json`` (the committed baseline checked by
+benchmarks/check_regression.py):
+
+    PYTHONPATH=src python -m benchmarks.run --only real_executor [--fast]
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.cache import BlockAllocator
+from repro.configs import get_reduced
+from repro.serving.executors import ModelExecutor
+from repro.serving.request import Modality, Request, State
+
+BASELINE_PATH = Path(__file__).resolve().parent.parent / \
+    "BENCH_executor.json"
+
+ARCH = "chatglm3-6b"
+PROMPT_BASE = 40
+MAX_LEN = 256
+
+
+def _mk(rid: str, prompt: int, out: int = 64) -> Request:
+    return Request(rid=rid, modality=Modality.TEXT, arrival=0.0,
+                   text_tokens=prompt, prompt_tokens=prompt,
+                   output_tokens=out)
+
+
+def _run_one(cfg, batch: int, decode_iters: int, legacy: bool):
+    """Prefill `batch` requests, run timed decode iterations.
+
+    Returns (tokens_per_s, prefill_wall_s, emitted_tokens, recompile_keys).
+    """
+    ex = ModelExecutor(cfg, max_slots=max(16, batch), max_len=MAX_LEN,
+                       legacy=legacy)
+    alloc = BlockAllocator(num_pages=ex.allocator.num_pages, page_size=16)
+    ex.bind_allocator(alloc)
+    reqs = [_mk(f"r{i}", PROMPT_BASE + 3 * i) for i in range(batch)]
+    for r in reqs:
+        alloc.allocate(r.rid, r.prompt_tokens + decode_iters + 8)
+        r.state = State.PREFILLING
+    t0 = time.perf_counter()
+    ex.run_iteration([(r, r.prompt_tokens) for r in reqs], [], [])
+    prefill_s = time.perf_counter() - t0
+    for r in reqs:
+        r.prefilled = r.prompt_tokens
+        r.state = State.RUNNING
+        r.decoded = 1
+    warmup = 3
+    for _ in range(warmup):
+        ex.run_iteration([], reqs, [])
+        for r in reqs:
+            r.decoded += 1
+    t0 = time.perf_counter()
+    for _ in range(decode_iters - warmup):
+        ex.run_iteration([], reqs, [])
+        for r in reqs:
+            r.decoded += 1
+    dt = time.perf_counter() - t0
+    tps = batch * (decode_iters - warmup) / dt
+    emitted = {r.rid: list(ex.emitted[r.rid]) for r in reqs}
+    return tps, prefill_s, emitted, sorted(ex.recompile_keys)
+
+
+def measure(fast: bool = False):
+    cfg = get_reduced(ARCH)
+    batches = [1, 4, 8] if fast else [1, 4, 8, 16]
+    decode_iters = 10 if fast else 28
+    curve = {}
+    parity = True
+    recompiles = {}
+    for batch in batches:
+        b_tps, b_pre, b_tok, b_keys = _run_one(cfg, batch, decode_iters,
+                                               legacy=False)
+        l_tps, l_pre, l_tok, _ = _run_one(cfg, batch, decode_iters,
+                                          legacy=True)
+        parity = parity and (b_tok == l_tok)
+        recompiles[str(batch)] = b_keys
+        curve[str(batch)] = {
+            "batched_tok_s": round(b_tps, 2),
+            "legacy_tok_s": round(l_tps, 2),
+            "speedup": round(b_tps / l_tps, 3),
+            "batched_prefill_s": round(b_pre, 4),
+            "legacy_prefill_s": round(l_pre, 4),
+            "token_parity": b_tok == l_tok,
+        }
+    # bucketed shapes bound jit recompiles: one prefill signature and one
+    # decode signature per power-of-two batch bucket here
+    n_sigs = len({k for keys in recompiles.values() for k in keys})
+    return {
+        "arch": ARCH,
+        "decode_iters": decode_iters,
+        "curve": curve,
+        "token_parity": parity,
+        "recompile_signatures": n_sigs,
+        "recompile_keys": recompiles,
+    }
+
+
+def main(fast: bool = False):
+    results = measure(fast=fast)
+    rows = []
+    for b, c in results["curve"].items():
+        print(f"  batch {b:>2}: batched {c['batched_tok_s']:8.1f} tok/s  "
+              f"legacy {c['legacy_tok_s']:8.1f} tok/s  "
+              f"speedup {c['speedup']:.2f}x  parity={c['token_parity']}")
+        rows.append(f"real_executor_speedup_b{b},{c['speedup']},tok_s_ratio")
+    print(f"  token parity (all batches): {results['token_parity']}")
+    print(f"  jit signatures compiled: {results['recompile_signatures']}")
+    assert results["token_parity"], \
+        "batched path no longer emits bit-identical tokens to legacy"
+    # one prefill + one decode signature per batch bucket, small constant
+    assert results["recompile_signatures"] <= 2 * len(results["curve"]) + 2, \
+        f"unbounded jit recompiles: {results['recompile_keys']}"
+    if not fast:
+        b8 = results["curve"]["8"]["speedup"]
+        assert b8 >= 3.0, f"batch-8 speedup {b8:.2f}x below the 3x target"
+        BASELINE_PATH.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"  wrote {BASELINE_PATH.name}")
+    rows.append(
+        f"real_executor_parity,{int(results['token_parity'])},bool")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

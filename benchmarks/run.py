@@ -13,11 +13,13 @@ def main() -> None:
     from . import (ablation, assigned_archs, characterization, decode_priority, e2e,
                    encode_overlap, estimator_accuracy, load_scaling,
                    memory_pressure, multi_replica, preemptions,
-                   priority_curves, roofline, scheduler_overhead, slo_scales,
-                   ttft_breakdown, workload_mix, workloads_tcm)
+                   priority_curves, real_executor, roofline,
+                   scheduler_overhead, slo_scales, ttft_breakdown,
+                   workload_mix, workloads_tcm)
     benches = [
         ("scheduler_overhead", scheduler_overhead),
         ("encode_overlap", encode_overlap),
+        ("real_executor", real_executor),
         ("fig2_characterization", characterization),
         ("fig3_workload_mix", workload_mix),
         ("fig4_14_memory_pressure", memory_pressure),

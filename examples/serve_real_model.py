@@ -1,8 +1,12 @@
 """End-to-end driver: serve a REAL (reduced) JAX model with batched
 multimodal requests through the TCM engine on CPU.
 
-Every token is actually computed (dense slot KV cache, chunked prefill,
-decode steps); engine timing comes from measured wall-clock.
+Every token is actually computed — the batched paged-KV execution path
+runs each engine iteration as one packed prefill call plus one fused
+decode step over the whole running set (block tables from the engine
+allocator, greedy tokens fed back); engine timing comes from measured
+wall-clock. Pass executor_kind="real-legacy" for the sequential
+per-request oracle the batched path is benchmarked against.
 
   PYTHONPATH=src python examples/serve_real_model.py
 """

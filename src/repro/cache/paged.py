@@ -4,6 +4,15 @@ Layout per layer: (num_pages, page_size, KV, hd), matching the Pallas
 paged-attention kernel. Writes are block-table scatters; the whole store is
 functionally updated (donated in jit on real deployments).
 
+``PagedKVStore`` is the single-layer view (engine bookkeeping, kernel
+tests).  The serving executor's batched path holds one ``PagedStackStore``
+per scan stage instead: the same page arrays with a leading ``layers`` dim
+so the transformer's ``lax.scan`` over stacked layer weights can consume
+the KV pages as scan xs/ys (DESIGN.md §Batched execution path).  Batched
+multi-sequence writes go through ``scatter_pages`` — one block-table
+scatter for every (sequence, token) pair in the step, with ragged rows
+routed to a trash page.
+
 SSM/xLSTM state caches have *constant* per-request footprint, so they use a
 slot store (one row per active request) rather than pages — the classifier
 sees this as a constant memory feature (see DESIGN.md §Arch-applicability).
@@ -14,6 +23,37 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+
+
+def scatter_pages(k_pages, v_pages, k_new, v_new, block_table, start,
+                  new_lens, trash_page):
+    """Scatter S new tokens for each of B sequences into shared page arrays.
+
+    k_new/v_new: (B, S, KV, hd) — per-sequence new tokens, right-padded;
+    block_table: (B, max_pages) int32 page ids per sequence;
+    start: (B,) int32 context length already written per sequence;
+    new_lens: (B,) int32 valid tokens per row (<= S) — padding tokens and
+    whole padding rows are routed to ``trash_page`` so one fused scatter
+    covers the ragged batch;
+    trash_page: page id reserved for discarded writes (never mapped).
+
+    Returns (k_pages, v_pages) functionally updated.
+    """
+    B, S = k_new.shape[:2]
+    page = k_pages.shape[1]
+    max_tokens = block_table.shape[1] * page
+    pos = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]   # (B,S)
+    valid = jnp.arange(S, dtype=jnp.int32)[None, :] < new_lens[:, None]
+    posc = jnp.minimum(pos, max_tokens - 1)  # clamp before table lookup
+    pids = jnp.take_along_axis(block_table, posc // page, axis=1)
+    pids = jnp.where(valid, pids, trash_page)
+    offs = posc % page
+    flat = lambda a: a.reshape(B * S, *a.shape[2:])  # noqa: E731
+    k_pages = k_pages.at[flat(pids), flat(offs)].set(
+        flat(k_new).astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[flat(pids), flat(offs)].set(
+        flat(v_new).astype(v_pages.dtype), mode="drop")
+    return k_pages, v_pages
 
 
 @dataclass
@@ -50,6 +90,14 @@ class PagedKVStore:
             v_new.astype(self.v_pages.dtype))
         return PagedKVStore(k_pages, v_pages)
 
+    def write_batch(self, k_new, v_new, block_table, start, new_lens,
+                    trash_page):
+        """Batched multi-sequence scatter (see ``scatter_pages``)."""
+        k_pages, v_pages = scatter_pages(
+            self.k_pages, self.v_pages, k_new, v_new, block_table, start,
+            new_lens, trash_page)
+        return PagedKVStore(k_pages, v_pages)
+
     def gather(self, page_ids):
         """(n_pages,) -> contiguous (n_pages*page, KV, hd) k, v."""
         pids = jnp.asarray(page_ids)
@@ -62,6 +110,56 @@ jax.tree_util.register_pytree_node(
     PagedKVStore,
     lambda s: ((s.k_pages, s.v_pages), None),
     lambda _, c: PagedKVStore(*c),
+)
+
+
+@dataclass
+class PagedStackStore:
+    """Paged KV for one *stack* of layers: (layers, P, page, KV, hd).
+
+    One per attention block position per scan stage.  Registered as a
+    pytree so ``jax.lax.scan`` over the stacked layer weights can slice the
+    leading ``layers`` axis of both leaves and hand each scan step a
+    per-layer ``PagedStackStore`` view (leaves then (P, page, KV, hd));
+    the updated pages come back out as scan ys with the layer dim
+    restacked.  The whole container is donated under jit so XLA updates
+    the page arrays in place across iterations.
+    """
+    k_pages: jax.Array
+    v_pages: jax.Array
+
+    @classmethod
+    def create(cls, layers: int, num_pages: int, page_size: int,
+               kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        shape = (layers, num_pages, page_size, kv_heads, head_dim)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    @property
+    def page_size(self):
+        return self.k_pages.shape[-3]
+
+    def write_batch(self, k_new, v_new, block_table, start, new_lens,
+                    trash_page):
+        """Per-layer view write (leaves must be layer slices, ndim 4)."""
+        k_pages, v_pages = scatter_pages(
+            self.k_pages, self.v_pages, k_new, v_new, block_table, start,
+            new_lens, trash_page)
+        return PagedStackStore(k_pages, v_pages)
+
+    def gather_batch(self, block_table):
+        """Per-layer view: (B, maxp) -> contiguous (B, maxp*page, KV, hd)."""
+        B, maxp = block_table.shape
+        k = self.k_pages[block_table].reshape(
+            B, -1, *self.k_pages.shape[-2:])
+        v = self.v_pages[block_table].reshape(
+            B, -1, *self.v_pages.shape[-2:])
+        return k, v
+
+
+jax.tree_util.register_pytree_node(
+    PagedStackStore,
+    lambda s: ((s.k_pages, s.v_pages), None),
+    lambda _, c: PagedStackStore(*c),
 )
 
 

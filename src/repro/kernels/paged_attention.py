@@ -66,20 +66,46 @@ def _kernel(block_table, lengths, q_ref, k_ref, v_ref, o_ref,
             o_ref.dtype)
 
 
+LANE = 128     # TPU lane width: last dim of every tile
+SUBLANE = 8    # f32 sublane width: second-to-last dim
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
 def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
                     softcap: float = 0.0, interpret: bool = True):
     """q: (B,H,hd); k_pages/v_pages: (P,page_size,KV,hd);
-    block_table: (B,max_pages) int32; lengths: (B,) int32. -> (B,H,hd)."""
+    block_table: (B,max_pages) int32; lengths: (B,) int32. -> (B,H,hd).
+
+    Small ``head_dim``/``KV`` are zero-padded up to the TPU tile minima
+    (lane 128 / sublane 8) — required by Mosaic on the compiled path and
+    applied on the interpret path too so it exercises the same block
+    geometry. Zero-padding is exact (padded kv-heads carry zero q/k/v and
+    are sliced off, zero head-dim columns contribute nothing to the dot
+    products). ``sm_scale`` always uses the *original* head_dim.
+    """
     B, H, hd = q.shape
     P, page_size, KV, _ = k_pages.shape
     max_pages = block_table.shape[1]
     G = H // KV
     qg = q.reshape(B, KV, G, hd)
+    orig_kv, orig_hd = KV, hd
+    if hd % LANE or KV % SUBLANE:
+        hd_p = _round_up(hd, LANE)
+        kv_p = _round_up(KV, SUBLANE)
+        qg = jnp.pad(qg, ((0, 0), (0, kv_p - KV), (0, 0), (0, hd_p - hd)))
+        k_pages = jnp.pad(
+            k_pages, ((0, 0), (0, 0), (0, kv_p - KV), (0, hd_p - hd)))
+        v_pages = jnp.pad(
+            v_pages, ((0, 0), (0, 0), (0, kv_p - KV), (0, hd_p - hd)))
+        KV, hd = kv_p, hd_p
 
     kernel = functools.partial(
         _kernel, page_size=page_size, max_pages=max_pages, softcap=softcap,
-        sm_scale=1.0 / math.sqrt(hd))
+        sm_scale=1.0 / math.sqrt(orig_hd))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -104,4 +130,8 @@ def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
     )(block_table, lengths, qg, k_pages, v_pages)
-    return out.reshape(B, H, hd)
+    out = out[:, :orig_kv, :, :orig_hd]
+    # length-0 guard (padding rows in bucketed batches): the accumulator
+    # never ran, so force exact zeros rather than 0/eps division noise.
+    out = jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
+    return out.reshape(B, H, orig_hd)

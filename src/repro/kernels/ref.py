@@ -70,4 +70,48 @@ def ref_paged_attention(q, k_pages, v_pages, block_table, lengths, *,
     logits = jnp.where(mask[:, None], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhk,bkhd->bhd", w, v.astype(jnp.float32))
+    # length-0 guard: a fully-masked row would softmax to uniform weights
+    # over garbage; zero it to match the kernel's empty-accumulator output
+    # (padding rows in bucketed batches hit this).
+    out = jnp.where(lengths[:, None, None] > 0, out, 0.0)
+    return out.astype(q.dtype)
+
+
+def ref_paged_prefill_attention(q, k_pages, v_pages, block_table, q_start,
+                                new_lens, *, softcap: float = 0.0):
+    """Packed chunked-prefill attention over the paged KV cache.
+
+    The batched executor's prefill path: each row's chunk has already been
+    scattered into its pages; queries attend causally over the gathered
+    context.  Ragged per-sequence geometry rides in vectors:
+
+    q: (B, S, H, hd) — right-padded chunks at per-row global positions
+       [q_start[b], q_start[b] + new_lens[b]);
+    k_pages/v_pages: (num_pages, page_size, KV, hd);
+    block_table: (B, max_pages) int32;
+    q_start: (B,) int32 context tokens before this chunk;
+    new_lens: (B,) int32 valid chunk tokens (<= S).  Outputs at padding
+    positions (i >= new_lens[b]) are zeroed.
+    """
+    B, S, H, hd = q.shape
+    P, page_size, KV, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    k = k_pages[block_table].reshape(B, max_pages * page_size, KV, hd)
+    v = v_pages[block_table].reshape(B, max_pages * page_size, KV, hd)
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qpos = q_start[:, None] + jnp.arange(S)[None, :]          # (B, S)
+    kpos = jnp.arange(max_pages * page_size)[None, None, :]
+    mask = kpos <= qpos[:, :, None]                           # (B, S, Tk)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    pad = jnp.arange(S)[None, :] < new_lens[:, None]          # (B, S)
+    out = jnp.where(pad[:, :, None, None], out, 0.0)
     return out.astype(q.dtype)

@@ -36,8 +36,17 @@ def build_stack(arch: str, executor_kind: str = "sim", *,
         executor = SimExecutor(cm)
         prof_reqs = profiling_workload()
     else:
-        executor = ModelExecutor(get_reduced(arch), max_slots=16, max_len=256)
+        # "real" = batched paged path; "real-legacy" = the seed's
+        # sequential dense-slot oracle (token-parity baseline)
+        executor = ModelExecutor(get_reduced(arch), max_slots=16,
+                                 max_len=256,
+                                 legacy=(executor_kind == "real-legacy"))
         prof_reqs = profiling_workload(n_per_modality=8)
+        if kv_pages is None:
+            # real mode: KV capacity = the executor's paged-store capacity
+            # so engine page ids index the stores directly (the default
+            # A100-sized kv_pages would build gigabyte page arrays)
+            kv_pages = executor.capacity_pages
     profile = WorkloadProfiler(executor, arch).build(prof_reqs)
     est = ImpactEstimator.train(profile)
     classifier = (NaiveClassifier(est) if naive_classifier
@@ -71,7 +80,8 @@ def main():
     ap.add_argument("--mix", default="MH", choices=["T0", "ML", "MH"])
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--num-requests", type=int, default=200)
-    ap.add_argument("--executor", default="sim", choices=["sim", "real"])
+    ap.add_argument("--executor", default="sim",
+                    choices=["sim", "real", "real-legacy"])
     ap.add_argument("--naive-classifier", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

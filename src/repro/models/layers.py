@@ -185,6 +185,55 @@ def attention_block(x, p, cfg: ModelConfig, *, positions, q_start=0,
     return shard_act(out, "batch", "seq", "embed_act"), new_cache
 
 
+def paged_attention_block(x, p, cfg: ModelConfig, *, positions, store, ctx,
+                          impl: str = "gather"):
+    """Attention sub-block over the batched paged KV cache (norm handled by
+    caller, like ``attention_block``).
+
+    x: (B, S, D) — S new tokens per sequence, right-padded (ragged geometry
+    in ``ctx``); store: per-layer ``PagedStackStore`` view (leaves (P, page,
+    KV, hd)); ctx: dict with
+      block_table (B, max_pages) int32 — page ids per sequence (padding
+        entries point at the trash page, which is always the store's last);
+      lengths (B,) int32 — context tokens already written per sequence;
+      new_lens (B,) int32 — valid new tokens per row (<= S).
+    impl: 'kernel' routes S==1 decode through the Pallas paged-attention
+    kernel (native on TPU, interpret elsewhere); 'gather' is the pure-JAX
+    path — gather pages to a contiguous context and run the same ``mha``
+    the dense slot cache uses, so batched decode/prefill stays numerically
+    aligned with the sequential legacy executor (token-parity oracle).
+
+    Returns (out (B, S, D), new_store).
+    """
+    B, S, D = x.shape
+    q, k, v = qkv_proj(x, p, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_style)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_style)
+    q = shard_act(q, "batch", "seq", "heads", None)
+    bt, lengths, new_lens = ctx["block_table"], ctx["lengths"], ctx["new_lens"]
+    trash = store.k_pages.shape[0] - 1
+    store = store.write_batch(k, v, bt, lengths, new_lens, trash)
+    if impl == "kernel" and S == 1:
+        from repro.kernels import ops as kops
+        out = kops.paged_attention(
+            q[:, 0], store.k_pages, store.v_pages, bt, lengths + new_lens,
+            softcap=cfg.logit_softcap)[:, None]
+    else:
+        ck, cv = store.gather_batch(bt)      # (B, max_pages*page, KV, hd)
+        Tk = ck.shape[1]
+        qpos = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        mask = jnp.arange(Tk, dtype=jnp.int32)[None, None, :] <= \
+            qpos[:, :, None]                 # (B, S, Tk) per-row causal
+        # mha branches on GQA: logits are (b,h,q,k) or (b,kv,g,q,k)
+        mask = mask[:, None] if k.shape[2] == q.shape[2] \
+            else mask[:, None, None]
+        out = mha(q, ck.astype(q.dtype), cv.astype(q.dtype), mask,
+                  softcap=cfg.logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    out = opt_barrier(out)
+    return shard_act(out, "batch", "seq", "embed_act"), store
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

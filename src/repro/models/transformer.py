@@ -269,15 +269,46 @@ def cache_decls(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def paged_supported(cfg: ModelConfig) -> bool:
+    """True when every decoder block can use the paged-KV cache protocol
+    (global causal attention, optionally MoE). SSM/xLSTM state and
+    sliding-window / cross-attention KV keep the dense slot cache — their
+    per-request footprint is constant or windowed, not paged."""
+    if cfg.is_encoder_decoder:
+        return False
+    return all(bt in (ATTN, ATTN_MOE)
+               for period, _ in cfg.stages() for bt in period)
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
-def _apply_attnish(x, bp, bt, cfg, *, positions, q_start, cache, enc_out, idx):
+def _apply_attnish(x, bp, bt, cfg, *, positions, q_start, cache, enc_out, idx,
+                   paged_ctx=None, attn_impl="gather"):
     """Attention-family block (incl. MoE MLP and cross-attn). Returns
     (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = _norm(x, bp, cfg, "ln1")
+    if paged_ctx is not None:
+        # batched paged-KV serving path: cache is a per-layer
+        # PagedStackStore view; block table / ragged lengths ride in
+        # paged_ctx (see DESIGN.md §Batched execution path). Sliding-window
+        # and cross-attention blocks keep the dense slot cache — the
+        # executor gates which archs take this path.
+        if bt not in (ATTN, ATTN_MOE):
+            raise NotImplementedError(
+                f"paged cache protocol does not support block type {bt!r}")
+        attn_out, new_cache = L.paged_attention_block(
+            h, bp["attn"], cfg, positions=positions, store=cache,
+            ctx=paged_ctx, impl=attn_impl)
+        x = x + attn_out
+        h = _norm(x, bp, cfg, "ln2")
+        if bt in MOE_BLOCKS:
+            mlp_out, aux = L.moe_block(h, bp["moe"], cfg)
+        else:
+            mlp_out = L.mlp_block(h, bp["mlp"])
+        return x + mlp_out, new_cache, aux
     window = cfg.window_for(bt)
     blk_cache = None
     if cache is not None and bt != ENC_ATTN:
@@ -347,11 +378,13 @@ def _apply_mambaish(x, bp, bt, cfg, *, cache):
     return x + mlp_out, new_cache, aux
 
 
-def apply_block(x, bp, bt, cfg, *, positions, q_start, cache, enc_out, idx):
+def apply_block(x, bp, bt, cfg, *, positions, q_start, cache, enc_out, idx,
+                paged_ctx=None, attn_impl="gather"):
     if bt in (ATTN, ATTN_L, ATTN_MOE, ENC_ATTN, DEC_ATTN):
         return _apply_attnish(x, bp, bt, cfg, positions=positions,
                               q_start=q_start, cache=cache, enc_out=enc_out,
-                              idx=idx)
+                              idx=idx, paged_ctx=paged_ctx,
+                              attn_impl=attn_impl)
     if bt in (MAMBA, MAMBA_MOE):
         return _apply_mambaish(x, bp, bt, cfg, cache=cache)
     if bt == MLSTM:
@@ -372,7 +405,8 @@ def apply_block(x, bp, bt, cfg, *, positions, q_start, cache, enc_out, idx):
 
 
 def _run_stages(x, stage_params, stage_caches, patternized, cfg, *,
-                positions, q_start, enc_out, idx, remat):
+                positions, q_start, enc_out, idx, remat, paged_ctx=None,
+                attn_impl="gather"):
     """Scan each stage's period body over its repeats."""
     total_aux = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -388,7 +422,8 @@ def _run_stages(x, stage_params, stage_caches, patternized, cfg, *,
                 blk_c = lc[f"b{bi}"] if lc is not None else None
                 xx, nbc, a = apply_block(
                     xx, lp[f"b{bi}"], bt, cfg, positions=positions,
-                    q_start=q_start, cache=blk_c, enc_out=enc_out, idx=idx)
+                    q_start=q_start, cache=blk_c, enc_out=enc_out, idx=idx,
+                    paged_ctx=paged_ctx, attn_impl=attn_impl)
                 if new_lc is not None:
                     new_lc[f"b{bi}"] = nbc
                 aux = aux + a
@@ -437,14 +472,22 @@ def _sinusoid_at(positions, D):
 
 def forward(params, cfg: ModelConfig, tokens, *, positions=None,
             mm_embeds=None, enc_frames=None, cache=None, q_start=0,
-            remat=False, last_only=False):
+            remat=False, last_only=False, last_pos=None, attn_impl="gather"):
     """Unified forward.
 
     tokens: (B, S) int32. positions: (B,S) or (B,S,3) for mrope.
     mm_embeds: (B, N_mm, D) stub patch/frame embeddings (VLM) — replace the
       first N_mm token embeddings.
     enc_frames: (B, T_enc, D) stub audio frames (whisper).
-    cache: cache tree from cache_decls (prefill-with-cache / decode), or None.
+    cache: cache tree from cache_decls (prefill-with-cache / decode), or None
+      — OR a *paged* cache for the batched serving path: a dict with
+      "stages" (per-stage {"b<i>": PagedStackStore}), "block_table" (B,
+      max_pages), "lengths" (B,) context written per row, and "new_lens"
+      (B,) valid new tokens per row. The presence of "block_table" selects
+      the paged protocol; attn_impl ('gather' | 'kernel') picks the decode
+      attention backend (see layers.paged_attention_block).
+    last_pos: (B,) int32 — gather this position per row before the lm_head
+      (ragged packed prefill: only each row's last real token needs logits).
     Returns (logits (B,S,V), new_cache_or_None, aux_loss).
     """
     B, S = tokens.shape
@@ -467,14 +510,25 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None,
     if cfg.is_encoder_decoder and enc_frames is not None:
         enc_out = encode(params, cfg, enc_frames.astype(cfg.dtype))
 
-    idx = cache["idx"] if cache is not None else None
+    paged = cache is not None and "block_table" in cache
+    paged_ctx = None
+    if paged:
+        idx = None
+        paged_ctx = {"block_table": cache["block_table"],
+                     "lengths": cache["lengths"],
+                     "new_lens": cache["new_lens"]}
+    else:
+        idx = cache["idx"] if cache is not None else None
     stage_caches = cache["stages"] if cache is not None else None
     x, new_stage_caches, aux = _run_stages(
         x, params["stages"], stage_caches, cfg.stages(), cfg,
         positions=positions, q_start=q_start, enc_out=enc_out, idx=idx,
-        remat=remat)
+        remat=remat, paged_ctx=paged_ctx, attn_impl=attn_impl)
 
-    if last_only:
+    if last_pos is not None:
+        # packed ragged prefill: each row's last real position only
+        x = jnp.take_along_axis(x, last_pos[:, None, None], axis=1)
+    elif last_only:
         x = x[:, -1:]  # serving prefill: lm_head on the final position only
     if cfg.norm_style() == "layernorm":
         x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
@@ -485,6 +539,11 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None,
     logits = shard_act(logits, "batch", "seq", "vocab")
 
     new_cache = None
-    if cache is not None:
+    if paged:
+        new_cache = {"stages": new_stage_caches,
+                     "block_table": cache["block_table"],
+                     "lengths": cache["lengths"] + cache["new_lens"],
+                     "new_lens": cache["new_lens"]}
+    elif cache is not None:
         new_cache = {"stages": new_stage_caches, "idx": idx + S}
     return logits, new_cache, aux

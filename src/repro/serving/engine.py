@@ -81,6 +81,11 @@ class Engine:
             raise ValueError("encode_budget must be positive")
         self.allocator = BlockAllocator(self.config.kv_pages,
                                         self.config.page_size)
+        # paged-executor plumbing: the engine's page lists ARE the
+        # executor's block tables, so the executor adopts this allocator
+        # (its page ids index the executor's paged KV stores directly)
+        if hasattr(self.executor, "bind_allocator"):
+            self.executor.bind_allocator(self.allocator)
         self.queues = QueueManager()
         self.now = 0.0
         # insertion-ordered sets (dict keys): O(1) membership/removal while
@@ -428,6 +433,9 @@ class Engine:
                     cache.insert(req.mm_hash, req.mm_units)
                 req.state = State.WAITING
                 self.queues.push(req, self.now)
+        page = self.config.page_size
+        legacy = self.config.legacy_scheduling
+        alloc = self.allocator
         for req, chunk in prefill_work:
             if req not in self.prefilling:
                 continue  # preempted later in the same planning pass
@@ -438,9 +446,12 @@ class Engine:
                 req.state = State.RUNNING
                 del self.prefilling[req]
                 self.running[req] = None
-        page = self.config.page_size
-        legacy = self.config.legacy_scheduling
-        alloc = self.allocator
+                # paged coverage: next iteration's decode writes KV at
+                # position prompt_tokens, so when the prompt exactly fills
+                # its pages the admission allocation has no slack — grow
+                # now (post-decode growth keeps the invariant thereafter)
+                if req.prompt_tokens + 1 > page * alloc.owned_pages(req.rid):
+                    self._grow_kv(req, req.prompt_tokens + 1)
         done = []
         for req in decode_batch:
             if req not in self.running:

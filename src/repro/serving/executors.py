@@ -6,19 +6,33 @@ device throughput, quadratic attention term, per-iteration decode cost,
 modality preprocess/encode stage costs. Used for workload-scale scheduler
 experiments (the scheduler sees the identical engine API either way).
 
-ModelExecutor — runs the real JAX model (reduced config) with the dense
-slot cache; proves the engine end-to-end on CPU and backs the examples.
+ModelExecutor — runs the real JAX model (reduced config). The default
+batched mode executes each engine iteration as one jit-compiled packed
+prefill step plus one fused decode step over the whole running set, with
+per-layer KV in paged stores indexed by the engine allocator's block
+tables (DESIGN.md §Batched execution path). ``legacy=True`` keeps the
+seed's one-``forward``-per-request dense-slot path as the token-parity
+oracle and benchmark baseline (benchmarks/real_executor.py asserts the
+two emit bit-identical tokens).
 """
 from __future__ import annotations
 
 import time
+import zlib
+from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.profiler import ProfileRecord
 
-from .request import Modality, Request
+from .request import Modality, Request, State
+
+
+class SlotCapacityError(RuntimeError):
+    """Legacy dense-slot executor ran out of request slots (the seed raised
+    a bare IndexError from ``free_slots.pop()``). Raise ``max_slots`` or
+    lower ``EngineConfig.max_num_seqs``."""
 
 
 @dataclass
@@ -187,17 +201,37 @@ class SimExecutor:
 
 
 class ModelExecutor:
-    """Real-JAX backend over a reduced model with a dense slot cache.
+    """Real-JAX backend over a reduced model.
 
-    Wall-clock timings on CPU are *measured* (they drive the engine clock in
-    real mode); token values are actually computed, proving the engine +
-    cache + kernels end-to-end.
+    Batched mode (default, attention-only archs): per-layer KV lives in
+    ``PagedStackStore`` page arrays shared by every request; the engine
+    allocator's page lists become real block tables. Each iteration runs
+    as at most two jit-compiled calls — a packed ragged prefill over this
+    iteration's chunks and one fused decode step over the entire running
+    set — with page stores donated so XLA updates them in place. Batch and
+    chunk dims are bucketed to powers of two so jit recompiles stay
+    bounded (counted in ``recompile_keys``).
+
+    ``legacy=True`` (or an arch the paged protocol does not cover —
+    SSM/xLSTM/sliding-window/cross-attn) runs the seed's per-request
+    dense-slot path: one ``T.forward`` per request per iteration (jitted,
+    so benchmarks compare batching rather than eager-dispatch overhead).
+    Both paths emit real greedy tokens (argmax, fed back as the next
+    decode input) into ``emitted`` so batched-vs-legacy token parity is
+    assertable bit-for-bit.
+
+    Wall-clock timings on CPU are *measured* (they drive the engine clock
+    in real mode); token values are actually computed, proving the engine
+    + cache + kernels end-to-end.
     """
 
-    def __init__(self, cfg, max_slots: int = 8, max_len: int = 512, seed=0):
+    def __init__(self, cfg, max_slots: int = 8, max_len: int = 512, seed=0,
+                 *, legacy: bool = False, attn_impl: str = "auto",
+                 page_size: int = 16):
         import jax
         import jax.numpy as jnp
 
+        from repro.cache import BlockAllocator
         from repro.models import transformer as T
         from repro.models.params import init_params
         self.jnp = jnp
@@ -205,42 +239,172 @@ class ModelExecutor:
         self.T = T
         self.cfg = cfg
         self.max_len = max_len
+        self.max_slots = max_slots
+        self.paged_ok = T.paged_supported(cfg)
+        self.legacy = legacy or not self.paged_ok
+        if attn_impl == "auto":
+            # Pallas kernel natively on TPU; pure-JAX gather+mha path on
+            # CPU (the interpret-mode kernel replays the grid in Python —
+            # fine for tests, not for the serving hot loop)
+            attn_impl = "kernel" if jax.default_backend() == "tpu" else \
+                "gather"
+        self.attn_impl = attn_impl
         key = jax.random.PRNGKey(seed)
         self.params = init_params(T.model_decls(cfg), key)
-        self.caches = [init_params(T.cache_decls(cfg, 1, max_len), key)
-                       for _ in range(max_slots)]
+        # dense per-request slot caches: only the legacy path keeps them
+        # (the batched path retires the slot store for attention KV)
+        self.caches = ([init_params(T.cache_decls(cfg, 1, max_len), key)
+                        for _ in range(max_slots)] if self.legacy else None)
         self.slot_of: dict[str, int] = {}
         self.free_slots = list(range(max_slots))
+        # page accounting: replaced by the engine's allocator via
+        # bind_allocator; standalone use gets a private one
+        self.allocator = BlockAllocator(
+            num_pages=max(1, max_slots * max_len // page_size),
+            page_size=page_size)
+        self._stores = None           # lazy: [{bname: PagedStackStore}]
+        self._ctx: dict[str, int] = {}        # KV tokens written per rid
+        self.emitted: dict[str, list[int]] = {}
+        self._finished_rids = deque()
+        self._prompt_cache: dict[str, np.ndarray] = {}
+        self.recompile_keys: set[tuple] = set()
+        # one jitted step serves both phases: decode is a 1-token prefill
+        # (new_lens 1 -> last_pos 0), so signatures differ only by shape
+        self._prefill_jit = jax.jit(self._prefill_step, donate_argnums=(1,))
+        # legacy per-request step, jitted: same seed semantics (one call
+        # per request, dense slot cache) minus the eager-dispatch tax, so
+        # the batched-vs-legacy benchmark measures *batching*, not jit.
+        # One signature per distinct chunk length (decode is always (1,1)).
+        self._legacy_jit = jax.jit(
+            lambda params, tokens, positions, cache, q_start:
+            self.T.forward(params, self.cfg, tokens, positions=positions,
+                           cache=cache, q_start=q_start))
+
+    # -- plumbing -----------------------------------------------------------
+    def bind_allocator(self, allocator) -> None:
+        """Adopt the engine's BlockAllocator: its page ids index the paged
+        stores directly (id P — one past the allocator's last — is the
+        reserved trash page for ragged-batch padding writes)."""
+        if self._stores is not None and (
+                allocator.num_pages != self.allocator.num_pages
+                or allocator.page_size != self.allocator.page_size):
+            self._stores = None   # re-created lazily at the new geometry
+        self.allocator = allocator
+
+    @property
+    def capacity_pages(self) -> int:
+        return self.allocator.num_pages
+
+    def _make_stores(self):
+        from repro.cache.paged import PagedStackStore
+        jnp = self.jnp
+        cfg = self.cfg
+        P = self.allocator.num_pages + 1          # +1: trash page
+        page = self.allocator.page_size
+        bytes_total = 0
+        stores = []
+        for period, reps in cfg.stages():
+            stage = {}
+            for bi, _bt in enumerate(period):
+                s = PagedStackStore.create(
+                    reps, P, page, cfg.num_kv_heads, cfg.hd,
+                    dtype=jnp.bfloat16)
+                bytes_total += 2 * s.k_pages.size * 2
+                stage[f"b{bi}"] = s
+            stores.append(stage)
+        if bytes_total > 8 << 30:
+            raise ValueError(
+                f"paged stores would need {bytes_total / 2**30:.1f} GiB "
+                f"({P} pages x {page}); size EngineConfig.kv_pages to the "
+                "executor (serve.build_stack does this for real mode)")
+        return stores
+
+    @property
+    def max_pages(self) -> int:
+        """Block-table width: fixed at the per-request context cap so the
+        gathered context length always equals the legacy dense cache's
+        ``max_len`` (keeps the two paths' attention shapes — and therefore
+        reduction order — identical)."""
+        return -(-self.max_len // self.allocator.page_size)
+
+    # -- deterministic token streams / emission -----------------------------
+    def _prompt_tokens(self, req: Request) -> np.ndarray:
+        toks = self._prompt_cache.get(req.rid)
+        if toks is None:
+            # stable digest: abs(hash(rid)) varied across processes under
+            # PYTHONHASHSEED, so real-mode runs did not reproduce
+            seed = zlib.crc32(req.rid.encode()) & 0x7FFFFFFF
+            rng = np.random.default_rng(seed)
+            toks = rng.integers(1, self.cfg.vocab_size,
+                                size=req.prompt_tokens, dtype=np.int64)
+            self._prompt_cache[req.rid] = toks
+        return toks
 
     def _tokens_for(self, req: Request, start: int, n: int):
-        rng = np.random.default_rng(abs(hash(req.rid)) % (2**31))
-        toks = rng.integers(1, self.cfg.vocab_size, size=req.prompt_tokens)
-        return self.jnp.asarray(toks[start:start + n], self.jnp.int32)[None]
+        toks = self._prompt_tokens(req)[start:start + n]
+        return self.jnp.asarray(toks, self.jnp.int32)[None]
 
+    # -- legacy slot management ---------------------------------------------
     def acquire_slot(self, req: Request):
         if req.rid not in self.slot_of:
+            if not self.free_slots:
+                raise SlotCapacityError(
+                    f"no free slot for {req.rid}: all {self.max_slots} "
+                    "slots busy — raise max_slots or lower "
+                    "EngineConfig.max_num_seqs")
             self.slot_of[req.rid] = self.free_slots.pop()
         return self.slot_of[req.rid]
 
+    # finished-request token lists retained for post-run inspection
+    # (parity tests, benchmarks); bounded so long-running serving does not
+    # leak one list per completed request
+    EMITTED_RETAIN = 4096
+
     def release_slot(self, req: Request):
+        """Drop a request's executor-side state (engine calls this on
+        preemption and on finish)."""
+        self._ctx.pop(req.rid, None)
+        if req.state is State.FINISHED:
+            self._prompt_cache.pop(req.rid, None)
+            if req.rid in self.emitted:
+                self._finished_rids.append(req.rid)
+                while len(self._finished_rids) > self.EMITTED_RETAIN:
+                    self.emitted.pop(self._finished_rids.popleft(), None)
+        else:
+            # recompute-style preemption: the re-prefill re-emits the same
+            # deterministic tokens from scratch
+            self.emitted.pop(req.rid, None)
         slot = self.slot_of.pop(req.rid, None)
         if slot is not None:
-            import jax
-            self.caches[slot] = jax.tree.map(
-                lambda a: a * 0 if a.ndim else a * 0, self.caches[slot])
+            self.caches[slot] = self.jax.tree.map(
+                lambda a: a * 0, self.caches[slot])
             self.free_slots.append(slot)
 
+    # -- profiler interface -------------------------------------------------
     def isolated_run(self, req: Request) -> ProfileRecord:
-        t0 = time.perf_counter()
-        slot = self.acquire_slot(req)
         n = min(req.prompt_tokens, self.max_len - 8)
-        toks = self._tokens_for(req, 0, n)
-        logits, cache, _ = self.T.forward(self.params, self.cfg, toks,
-                                          cache=self.caches[slot], q_start=0)
-        logits.block_until_ready()
+        t0 = time.perf_counter()
+        if self.legacy:
+            slot = self.acquire_slot(req)
+            toks = self._tokens_for(req, 0, n)
+            logits, cache, _ = self._legacy_jit(
+                self.params, toks, None, self.caches[slot],
+                self.jnp.int32(0))
+            logits.block_until_ready()
+            self.caches[slot] = cache
+        else:
+            rid = f"__profile__{req.rid}"
+            self.allocator.allocate(rid, n)
+            try:
+                toks = self._prompt_tokens(req)[:n]
+                out = self._paged_prefill_call(
+                    [(rid, toks, 0, 0, n)])
+                out.block_until_ready()
+            finally:
+                self.allocator.free(rid)
         prefill = time.perf_counter() - t0
-        self.caches[slot] = cache
         self.release_slot(req)
+        self._prompt_cache.pop(req.rid, None)
         return ProfileRecord(
             modality=req.modality.value, text_tokens=req.text_tokens,
             mm_units=req.mm_units, prompt_tokens=req.prompt_tokens,
@@ -259,28 +423,180 @@ class ModelExecutor:
         x = self.jnp.ones((n, 32), self.jnp.float32)
         (x @ x.T).block_until_ready()
 
+    # -- shared iteration-plan normalization --------------------------------
+    # Both paths consume the engine's plan through the same row filters so
+    # degenerate corners (mid-plan preemption, duplicate chunk entries,
+    # context-window clamping) resolve identically — a requirement for the
+    # bit-identical-token oracle.
+    def _prefill_rows(self, prefill_work):
+        """-> [(req, rope_start, n, emits_first_token)]."""
+        rows = []
+        est: dict[str, int] = {}
+        for req, chunk in prefill_work:
+            if self.allocator.owned_pages(req.rid) == 0:
+                continue   # preempted later in the same planning pass
+            start = est.get(req.rid, req.prefilled)
+            est[req.rid] = start + chunk
+            n = min(chunk, self.max_len - start - 4)
+            if n <= 0:
+                continue   # context window exhausted: no KV work possible
+            # emit the first token either at the true prompt end or — for
+            # prompts exceeding the context window — at the last in-window
+            # chunk, so over-window requests still enter the decode path
+            # (and pay real decode compute) instead of being dropped
+            done = (start + chunk >= req.prompt_tokens
+                    or start + n >= self.max_len - 4)
+            rows.append((req, start, n, done))
+        return rows
+
+    def _decode_rows(self, decode_reqs):
+        rows = []
+        for req in decode_reqs:
+            if (self.allocator.owned_pages(req.rid) == 0
+                    or req.rid not in self._ctx
+                    or not self.emitted.get(req.rid)):
+                continue   # preempted mid-plan / never finished prefill
+            rows.append(req)
+        return rows
+
+    # -- engine interface ----------------------------------------------------
     def run_iteration(self, prefill_work, decode_reqs, encode_work) -> float:
         t0 = time.perf_counter()
-        jnp = self.jnp
         for req, units in encode_work:
             self.encode_chunk(req, units)
-        for req, chunk in prefill_work:
-            slot = self.acquire_slot(req)
-            n = min(chunk, self.max_len - req.prefilled - 4)
-            if n <= 0:
-                continue
-            toks = self._tokens_for(req, req.prefilled, n)
-            _, cache, _ = self.T.forward(
-                self.params, self.cfg, toks, cache=self.caches[slot],
-                q_start=req.prefilled)
-            self.caches[slot] = cache
-        for req in decode_reqs:
-            slot = self.acquire_slot(req)
-            pos = min(req.prompt_tokens + req.decoded, self.max_len - 2)
-            tok = jnp.zeros((1, 1), jnp.int32)
-            logits, cache, _ = self.T.forward(
-                self.params, self.cfg, tok,
-                positions=jnp.full((1, 1), pos, jnp.int32),
-                cache=self.caches[slot], q_start=pos)
-            self.caches[slot] = cache
+        step = self._legacy_iteration if self.legacy else \
+            self._batched_iteration
+        step(self._prefill_rows(prefill_work),
+             self._decode_rows(decode_reqs))
         return time.perf_counter() - t0
+
+    # -- legacy sequential path (token-parity oracle) ------------------------
+    def _legacy_iteration(self, prefill_rows, decode_rows):
+        jnp = self.jnp
+        for req, rope_start, n, done in prefill_rows:
+            # slot acquired only after the n>0 check: the seed's
+            # `n <= 0: continue` leaked the just-acquired slot
+            slot = self.acquire_slot(req)
+            toks = self._tokens_for(req, rope_start, n)
+            logits, cache, _ = self._legacy_jit(
+                self.params, toks, None, self.caches[slot],
+                jnp.int32(rope_start))
+            self.caches[slot] = cache
+            self._ctx[req.rid] = self._ctx.get(req.rid, 0) + n
+            if done:
+                tok = int(jnp.argmax(logits[0, n - 1]))
+                self.emitted.setdefault(req.rid, []).append(tok)
+        for req in decode_rows:
+            slot = self.acquire_slot(req)
+            pos = min(req.prompt_tokens + req.decoded - 1, self.max_len - 2)
+            tok = jnp.full((1, 1), self.emitted[req.rid][-1], jnp.int32)
+            logits, cache, _ = self._legacy_jit(
+                self.params, tok, jnp.full((1, 1), pos, jnp.int32),
+                self.caches[slot], jnp.int32(pos))
+            self.caches[slot] = cache
+            self._ctx[req.rid] += 1
+            self.emitted[req.rid].append(int(jnp.argmax(logits[0, 0])))
+
+    # -- batched paged path ---------------------------------------------------
+    @staticmethod
+    def _bucket(n: int) -> int:
+        return 1 << max(0, (n - 1).bit_length())
+
+    def _prefill_step(self, params, stores, tokens, positions, bt, lengths,
+                      new_lens):
+        jnp = self.jnp
+        cache = {"stages": stores, "block_table": bt, "lengths": lengths,
+                 "new_lens": new_lens}
+        last = jnp.maximum(new_lens - 1, 0)
+        logits, new_cache, _ = self.T.forward(
+            params, self.cfg, tokens, positions=positions, cache=cache,
+            last_pos=last, attn_impl=self.attn_impl)
+        return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32),
+                new_cache["stages"])
+
+    def _block_table_rows(self, rids, maxp: int) -> np.ndarray:
+        trash = self.allocator.num_pages
+        bt = np.full((len(rids), maxp), trash, np.int32)
+        for i, rid in enumerate(rids):
+            pages = self.allocator.pages_of(rid)[:maxp]
+            bt[i, :len(pages)] = pages
+        return bt
+
+    def _paged_prefill_call(self, rows):
+        """rows: [(rid, tokens ndarray, rope_start, write_start, n)].
+        Runs one packed jit'd prefill step; returns last-token ids (B,)."""
+        jnp = self.jnp
+        if self._stores is None:
+            self._stores = self._make_stores()
+        B = self._bucket(len(rows))
+        C = self._bucket(max(n for *_x, n in rows))
+        maxp = self.max_pages
+        self.recompile_keys.add(("prefill", B, C))
+        toks = np.zeros((B, C), np.int32)
+        pos = np.zeros((B, C), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        new_lens = np.zeros((B,), np.int32)
+        for i, (_rid, t, rope_start, write_start, n) in enumerate(rows):
+            toks[i, :n] = t
+            pos[i] = rope_start + np.arange(C)
+            lengths[i] = write_start
+            new_lens[i] = n
+        bt = np.full((B, maxp), self.allocator.num_pages, np.int32)
+        bt[:len(rows)] = self._block_table_rows([r[0] for r in rows], maxp)
+        out, self._stores = self._prefill_jit(
+            self.params, self._stores, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(bt), jnp.asarray(lengths), jnp.asarray(new_lens))
+        return out
+
+    def _batched_iteration(self, prefill_rows, decode_rows):
+        jnp = self.jnp
+        # waves: a request may legitimately appear twice in one plan
+        # (preempted then re-admitted); its chunks must apply in order and
+        # never share one scatter (duplicate indices are unordered)
+        waves: list[list] = []
+        seen_at: dict[str, int] = {}
+        for row in prefill_rows:
+            w = seen_at.get(row[0].rid, -1) + 1
+            seen_at[row[0].rid] = w
+            if w == len(waves):
+                waves.append([])
+            waves[w].append(row)
+        for wave in waves:
+            # write_start read per wave: a later wave of the same request
+            # starts where the previous wave's writes ended
+            rows = [(req.rid, self._prompt_tokens(req)[rope:rope + n],
+                     rope, self._ctx.get(req.rid, 0), n)
+                    for req, rope, n, _d in wave]
+            out = self._paged_prefill_call(rows)
+            out = np.asarray(out)
+            for i, (req, _rope, n, done) in enumerate(wave):
+                self._ctx[req.rid] = rows[i][3] + n
+                if done:
+                    self.emitted.setdefault(req.rid, []).append(int(out[i]))
+        if not decode_rows:
+            return
+        if self._stores is None:
+            self._stores = self._make_stores()
+        B = self._bucket(len(decode_rows))
+        maxp = self.max_pages
+        self.recompile_keys.add(("decode", B))
+        toks = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B, 1), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        new_lens = np.zeros((B,), np.int32)
+        for i, req in enumerate(decode_rows):
+            toks[i, 0] = self.emitted[req.rid][-1]
+            pos[i, 0] = min(req.prompt_tokens + req.decoded - 1,
+                            self.max_len - 2)
+            lengths[i] = self._ctx[req.rid]
+            new_lens[i] = 1
+        bt = np.full((B, maxp), self.allocator.num_pages, np.int32)
+        bt[:len(decode_rows)] = self._block_table_rows(
+            [r.rid for r in decode_rows], maxp)
+        out, self._stores = self._prefill_jit(
+            self.params, self._stores, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(bt), jnp.asarray(lengths), jnp.asarray(new_lens))
+        out = np.asarray(out)
+        for i, req in enumerate(decode_rows):
+            self._ctx[req.rid] += 1
+            self.emitted[req.rid].append(int(out[i]))
