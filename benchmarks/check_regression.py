@@ -18,6 +18,10 @@ blocking it:
     Token parity and the recompile-signature count are exact gates
     (they are deterministic); the batch-8 decode speedup is wall-clock,
     so it only has to clear a generous floor of the committed headline.
+  * ``BENCH_prefix.json`` — KV prefix cache. Real-executor token parity
+    (cache on/off/legacy) and the sim hit/COW/reclassification counts
+    are exact gates; the prefill-token savings and TTFT improvements are
+    deterministic sim floats checked within the small tolerance.
 
     PYTHONPATH=src python -m benchmarks.check_regression [--skip-wallclock]
 """
@@ -147,10 +151,57 @@ def check_executor_baseline(failures: list[str],
                         f"{floor:.2f}x (committed {committed:.2f}x)")
 
 
+def check_prefix_baseline(failures: list[str]) -> None:
+    path = ROOT / "BENCH_prefix.json"
+    if not path.exists():
+        failures.append("BENCH_prefix.json missing - run "
+                        "`python -m benchmarks.run --only prefix_cache`")
+        return
+    baseline = json.loads(path.read_text())
+    from benchmarks.prefix_cache import measure_real_parity, measure_sim
+    fresh = measure_sim()
+    exact = [
+        ("prefix.hits", baseline["cache"]["on"]["prefix"]["hits"],
+         fresh["cache"]["on"]["prefix"]["hits"]),
+        ("prefix.cow_copies",
+         baseline["cache"]["on"]["prefix"]["cow_copies"],
+         fresh["cache"]["on"]["prefix"]["cow_copies"]),
+        ("prefix.reclassified",
+         baseline["reclass_ablation"]["reclassified_requests"],
+         fresh["reclass_ablation"]["reclassified_requests"]),
+    ]
+    for name, want, got in exact:
+        status = "ok" if want == got else "REGRESSION"
+        print(f"  prefix/{name}: baseline {want}  fresh {got}  [{status}]")
+        if status != "ok":
+            failures.append(f"prefix/{name}: {got} != baseline {want}")
+    close = [
+        ("prefix.token_savings", baseline["prefill_token_savings"],
+         fresh["prefill_token_savings"]),
+        ("prefix.ttft_mean_improvement",
+         baseline["ttft_improvement"]["mean"],
+         fresh["ttft_improvement"]["mean"]),
+    ]
+    for name, want, got in close:
+        status = "ok" if _close(want, got) else "REGRESSION"
+        print(f"  prefix/{name}: baseline {want:.5f}  fresh {got:.5f}  "
+              f"[{status}]")
+        if status != "ok":
+            failures.append(f"prefix/{name}: {got:.5f} vs baseline "
+                            f"{want:.5f} (tol {SIM_REL_TOL:.0%})")
+    parity = measure_real_parity()["token_parity"]
+    print(f"  prefix/real_token_parity: {parity}  "
+          f"[{'ok' if parity else 'REGRESSION'}]")
+    if not parity:
+        failures.append("prefix/real_token_parity: cache on/off/legacy no "
+                        "longer emit bit-identical tokens")
+
+
 def main(argv: list[str]) -> int:
     failures: list[str] = []
     print("== perf regression gate ==")
     check_encode_baseline(failures)
+    check_prefix_baseline(failures)
     check_executor_baseline(failures,
                             skip_wallclock="--skip-wallclock" in argv)
     if "--skip-wallclock" not in argv:

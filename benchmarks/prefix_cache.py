@@ -1,0 +1,240 @@
+"""KV prefix cache benchmark (ISSUE 4 tentpole metric).
+
+Measures what ref-counted page sharing buys on a duplicate- and
+shared-prefix-heavy MH mix (``duplicate_prob`` repeats mm inputs,
+``shared_prefix_prob`` makes text requests open with pooled system
+prompts):
+
+  * cache on vs off — prefill tokens actually executed (the headline:
+    duplicate rocks prefill once), mean/p99 TTFT, per-class TTFT, and the
+    allocator's hit/COW/eviction counters;
+  * rock→sand re-classification ablation — cache on but the classifier
+    and SLOs ranking by *full* rather than residual prefill
+    (``prefix_residual_classify=False``), isolating how much of the win
+    is scheduling (priority) rather than skipped compute;
+  * equivalence before speed — the sim runs must finish identical
+    request sets with identical decode work, and a real-`ModelExecutor`
+    mini-mix (with a forced preemption) must emit bit-identical greedy
+    tokens with the cache on, off, and on the ``legacy=True`` dense-slot
+    oracle. Both are asserted before any speedup is reported.
+
+Sim numbers are deterministic on fixed seeds; the full mode writes
+``BENCH_prefix.json`` (the committed baseline that
+benchmarks/check_regression.py re-derives — exact on parity and hit
+counts, tolerant on float metrics):
+
+    PYTHONPATH=src python -m benchmarks.run --only prefix_cache [--fast]
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row, pctl, stack
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor
+from repro.serving.metrics import summarize
+from repro.serving.workload import WorkloadConfig, generate
+
+MODEL = "llava-7b"
+POLICY = "tcm"
+NUM_REQUESTS = 300
+SEED = 11
+RATE = 4.0          # bursty enough that duplicates overlap their originals
+DUPLICATE_PROB = 0.5
+SHARED_PREFIX_PROB = 0.6
+BASELINE_PATH = Path(__file__).resolve().parent.parent / \
+    "BENCH_prefix.json"
+
+
+def _workload() -> WorkloadConfig:
+    return WorkloadConfig(mix="MH", rate=RATE, num_requests=NUM_REQUESTS,
+                          seed=SEED, video_frames_max=96,
+                          duplicate_prob=DUPLICATE_PROB,
+                          shared_prefix_prob=SHARED_PREFIX_PROB)
+
+
+def _engine_run(classifier, cm, *, cache=True, residual=True,
+                legacy_sched=False):
+    ex = SimExecutor(cm)
+    eng = Engine(make_policy(POLICY), ex, classifier,
+                 EngineConfig(token_budget=512, prefix_cache=cache,
+                              prefix_residual_classify=residual,
+                              legacy_scheduling=legacy_sched))
+    done = eng.run(generate(_workload()))
+    eng.allocator.check_invariants()
+    return done, eng, ex
+
+
+def _summary(done, eng, ex) -> dict:
+    s = summarize(done)
+    return {
+        "ttft_avg": {g: s[g]["ttft_avg"] for g in ("motorcycle", "car",
+                                                   "truck", "overall")
+                     if s[g] is not None},
+        "ttft_p99": round(pctl([r.ttft() for r in done], 99), 5),
+        "prefill_tokens": ex.prefill_tokens,
+        "cached_prefix_tokens": sum(r.cached_prefix_tokens for r in done),
+        "vclass_counts": {v: sum(r.vclass.value == v for r in done)
+                          for v in ("motorcycle", "car", "truck")},
+        "sim_time_s": round(eng.now, 4),
+        "iterations": eng.iterations,
+        "prefix": eng.allocator.prefix_stats(),
+    }
+
+
+def measure_sim() -> dict:
+    """Deterministic sim measurement (shared with the CI regression
+    gate). Asserts cache-on/off output parity before reporting."""
+    base, _, smart, _ = stack(MODEL)
+    cm = base.cm
+    results: dict = {"meta": {
+        "model": MODEL, "policy": POLICY, "mix": "MH", "rate": RATE,
+        "num_requests": NUM_REQUESTS, "seed": SEED,
+        "duplicate_prob": DUPLICATE_PROB,
+        "shared_prefix_prob": SHARED_PREFIX_PROB,
+        "note": "simulated time on fixed seeds - deterministic baseline",
+    }}
+    on = _engine_run(smart, cm, cache=True)
+    off = _engine_run(smart, cm, cache=False)
+    noresid = _engine_run(smart, cm, cache=True, residual=False)
+    # equivalence first — real gates, not tautologies:
+    # 1. every finished request really covered its whole prompt (a claim
+    #    accounting bug would leave prefilled short or claims unbacked)
+    for done, eng, ex in (on, off):
+        assert all(r.prefilled == r.prompt_tokens for r in done)
+        assert all(r.cached_prefix_tokens <= r.prompt_tokens - 1
+                   for r in done)
+    assert {r.rid for r in on[0]} == {r.rid for r in off[0]}
+    # 2. the incremental planner must stay decision-identical to the
+    #    brute-force legacy_scheduling oracle *with the cache live*
+    legc = _engine_run(smart, cm, cache=True, legacy_sched=True)
+    assert [(r.rid, r.ttft(), r.finish_time, r.preemptions)
+            for r in on[0]] == \
+        [(r.rid, r.ttft(), r.finish_time, r.preemptions)
+         for r in legc[0]], \
+        "prefix cache broke fast-vs-legacy scheduling decision parity"
+    assert on[1].allocator.prefix_stats() == \
+        legc[1].allocator.prefix_stats()
+    s_on, s_off, s_nr = (_summary(*run) for run in (on, off, noresid))
+    results["cache"] = {"on": s_on, "off": s_off}
+    results["prefill_token_savings"] = round(
+        1.0 - s_on["prefill_tokens"] / s_off["prefill_tokens"], 5)
+    results["ttft_improvement"] = {
+        "mean": round(1.0 - s_on["ttft_avg"]["overall"]
+                      / s_off["ttft_avg"]["overall"], 5),
+        "p99": round(1.0 - s_on["ttft_p99"] / s_off["ttft_p99"], 5),
+    }
+    # rock->sand ablation: same page sharing, ranking ignores the cache
+    results["reclass_ablation"] = {
+        "no_residual": s_nr,
+        "reclassified_requests": sum(
+            a.vclass is not b.vclass
+            for a, b in zip(sorted(on[0], key=lambda r: r.rid),
+                            sorted(noresid[0], key=lambda r: r.rid))),
+        "ttft_improvement_vs_no_residual": round(
+            1.0 - s_on["ttft_avg"]["overall"]
+            / s_nr["ttft_avg"]["overall"], 5),
+    }
+    return results
+
+
+def measure_real_parity() -> dict:
+    """Real-executor acceptance: bit-identical emitted tokens cache-on vs
+    cache-off vs the ``legacy=True`` oracle on a duplicate-heavy mini-mix
+    with a forced mid-decode preemption (COW copies + evictions under a
+    24-page pool)."""
+    from repro.launch.serve import build_stack
+    wl = WorkloadConfig(mix="ML", rate=50.0, num_requests=10, seed=7,
+                        out_tokens_log_mu=1.8, out_tokens_log_sigma=0.3,
+                        text_tokens_log_mu=3.2, text_tokens_log_sigma=0.5,
+                        video_frames_min=1, video_frames_max=2,
+                        image_patches=32, video_patches_per_frame=16,
+                        duplicate_prob=0.6, shared_prefix_prob=0.6,
+                        shared_prefix_tokens_min=20,
+                        shared_prefix_tokens_max=40)
+    emitted, stats = {}, {}
+    for key, kind, cache in (("on", "real", True), ("off", "real", False),
+                             ("legacy", "real-legacy", True)):
+        executor, classifier, engine_cfg, _, _ = build_stack(
+            "chatglm3-6b", kind, kv_pages=24)
+        engine_cfg.prefix_cache = cache
+        eng = Engine(make_policy(POLICY), executor, classifier, engine_cfg)
+        pending = generate(wl)
+        forced = False
+        for _ in range(100000):
+            pending = eng.step(pending)
+            if not forced and eng.running:
+                eng._preempt(next(iter(eng.running)))
+                forced = True
+            if len(eng.finished) + len(eng.rejected) == 10:
+                break
+        assert len(eng.finished) == 10
+        eng.allocator.check_invariants()
+        emitted[key] = {r.rid: eng.executor.emitted.get(r.rid)
+                        for r in eng.finished}
+        stats[key] = eng.allocator.prefix_stats()
+    parity = (emitted["on"] == emitted["off"] == emitted["legacy"]
+              and all(toks for toks in emitted["on"].values()))
+    return {
+        "token_parity": bool(parity),
+        "prefix_hits_on": stats["on"]["hits"],
+        "cow_copies_on": stats["on"]["cow_copies"],
+        "evictions_on": stats["on"]["evictions"],
+    }
+
+
+def measure(fast: bool = False) -> dict:
+    results = measure_sim()
+    results["real_parity"] = measure_real_parity()
+    return results
+
+
+def main(fast: bool = False):
+    rows = []
+    results = measure(fast=fast)
+    on = results["cache"]["on"]
+    off = results["cache"]["off"]
+    rp = results["real_parity"]
+    sav = results["prefill_token_savings"]
+    ti = results["ttft_improvement"]
+    print(f"  cache on : prefill tokens {on['prefill_tokens']:>8}  "
+          f"TTFT mean {on['ttft_avg']['overall']:.4f}s  "
+          f"p99 {on['ttft_p99']:.3f}s  hits {on['prefix']['hits']}  "
+          f"cow {on['prefix']['cow_copies']}  "
+          f"evictions {on['prefix']['evictions']}")
+    print(f"  cache off: prefill tokens {off['prefill_tokens']:>8}  "
+          f"TTFT mean {off['ttft_avg']['overall']:.4f}s  "
+          f"p99 {off['ttft_p99']:.3f}s")
+    print(f"  -> prefill-token savings {sav:.1%}, TTFT mean {ti['mean']:+.1%}"
+          f", p99 {ti['p99']:+.1%}")
+    ra = results["reclass_ablation"]
+    print(f"  rock->sand ablation: {ra['reclassified_requests']} requests "
+          f"re-classified; residual ranking worth "
+          f"{ra['ttft_improvement_vs_no_residual']:+.1%} mean TTFT on top "
+          f"of page sharing alone")
+    print(f"  real-executor parity (on/off/legacy): {rp['token_parity']}  "
+          f"(hits {rp['prefix_hits_on']}, cow {rp['cow_copies_on']}, "
+          f"evictions {rp['evictions_on']})")
+    assert rp["token_parity"], \
+        "prefix cache changed real-executor emitted tokens"
+    assert rp["prefix_hits_on"] > 0, "real parity run exercised no hits"
+    assert sav >= 0.30, f"prefill-token savings {sav:.1%} below 30% target"
+    assert ti["mean"] > 0, "prefix cache must improve mean TTFT"
+    rows.append(csv_row("prefix_cache/prefill_token_savings", sav))
+    rows.append(csv_row("prefix_cache/ttft_mean_improvement", ti["mean"]))
+    rows.append(csv_row("prefix_cache/ttft_p99_improvement", ti["p99"]))
+    rows.append(csv_row("prefix_cache/reclassified",
+                        ra["reclassified_requests"], "rock->sand"))
+    rows.append(csv_row("prefix_cache/real_token_parity",
+                        int(rp["token_parity"]), "bool"))
+    if not fast:
+        BASELINE_PATH.write_text(json.dumps(results, indent=2) + "\n")
+        print(f"  baseline written to {BASELINE_PATH.name}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

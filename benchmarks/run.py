@@ -1,6 +1,14 @@
 """Benchmark driver: one function per paper table/figure.
-Prints ``name,value,derived`` CSV rows for every benchmark."""
+Prints ``name,value,derived`` CSV rows for every benchmark.
+
+    python -m benchmarks.run [--fast] [--only SUBSTR] [--list]
+
+``--only`` runs the benchmarks whose name contains SUBSTR; a substring
+matching nothing is an error (exit 2) listing the known names — a typo
+must not silently run nothing and report success.
+"""
 import argparse
+import sys
 import time
 
 
@@ -8,11 +16,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="print the known benchmark names and exit")
     args = ap.parse_args()
 
     from . import (ablation, assigned_archs, characterization, decode_priority, e2e,
                    encode_overlap, estimator_accuracy, load_scaling,
-                   memory_pressure, multi_replica, preemptions,
+                   memory_pressure, multi_replica, preemptions, prefix_cache,
                    priority_curves, real_executor, roofline,
                    scheduler_overhead, slo_scales, ttft_breakdown,
                    workload_mix, workloads_tcm)
@@ -20,6 +30,7 @@ def main() -> None:
         ("scheduler_overhead", scheduler_overhead),
         ("encode_overlap", encode_overlap),
         ("real_executor", real_executor),
+        ("prefix_cache", prefix_cache),
         ("fig2_characterization", characterization),
         ("fig3_workload_mix", workload_mix),
         ("fig4_14_memory_pressure", memory_pressure),
@@ -37,10 +48,20 @@ def main() -> None:
         ("assigned_archs_tcm", assigned_archs),
         ("roofline", roofline),
     ]
+    if args.list:
+        for name, _mod in benches:
+            print(name)
+        return
+    selected = [(name, mod) for name, mod in benches
+                if not args.only or args.only in name]
+    if not selected:
+        print(f"error: --only {args.only!r} matched no benchmark",
+              file=sys.stderr)
+        print("known benchmarks:\n  " +
+              "\n  ".join(name for name, _m in benches), file=sys.stderr)
+        sys.exit(2)
     all_rows = []
-    for name, mod in benches:
-        if args.only and args.only not in name:
-            continue
+    for name, mod in selected:
         t0 = time.time()
         print(f"\n===== {name} =====")
         rows = mod.main(fast=args.fast) or []

@@ -1,6 +1,8 @@
 """Engine-side KV memory subsystem: page accounting (allocator) and the
 JAX-side paged store (paged — imported directly to avoid pulling jax into
 scheduler-only code paths)."""
-from .allocator import BlockAllocator, OutOfPages
+from .allocator import (BlockAllocator, OutOfPages, PrefixMatch,
+                        common_prefix_tokens, iter_page_runs)
 
-__all__ = ["BlockAllocator", "OutOfPages"]
+__all__ = ["BlockAllocator", "OutOfPages", "PrefixMatch",
+           "common_prefix_tokens", "iter_page_runs"]

@@ -146,6 +146,19 @@ class PagedStackStore:
             new_lens, trash_page)
         return PagedStackStore(k_pages, v_pages)
 
+    def copy_page(self, src, dst) -> "PagedStackStore":
+        """Copy one page's K/V across every layer of the stack — the
+        prefix cache's copy-on-write boundary-page copy (src stays a
+        valid cached page; dst becomes the claimer's private copy).
+        ``src``/``dst`` may be traced scalars, so one jit signature
+        serves every copy."""
+        def cp(a):
+            page = jax.lax.dynamic_index_in_dim(a, src, axis=1,
+                                                keepdims=True)
+            return jax.lax.dynamic_update_slice_in_dim(a, page, dst,
+                                                       axis=1)
+        return PagedStackStore(cp(self.k_pages), cp(self.v_pages))
+
     def gather_batch(self, block_table):
         """Per-layer view: (B, maxp) -> contiguous (B, maxp*page, KV, hd)."""
         B, maxp = block_table.shape

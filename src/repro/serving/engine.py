@@ -19,6 +19,15 @@ Per iteration (vLLM V1 semantics with chunked prefill):
      prefill emit their first token that iteration (TTFT); decoding
      requests emit one token per iteration.
 
+A ref-counted KV prefix cache spans the allocator, scheduler, and
+executors (DESIGN.md §KV prefix cache): completed prefills publish their
+page chains, later requests sharing a page-aligned prefix claim those
+pages (copy-on-write at the boundary page) and prefill only the residual,
+and the classifier/SLO rank them by that residual — so a duplicate video
+(rock) competes like the sand its remaining work is. Cache hits change
+*when* work happens, never what is emitted; ``prefix_cache=False`` and the
+legacy paths below stay bit-identical oracles.
+
 Scheduling bookkeeping is incremental (DESIGN.md §Incremental scheduling
 core): the waiting set lives in a ``WaitingIndex`` consumed lazily in rank
 order (no per-iteration global sort), running/prefilling membership is
@@ -62,6 +71,16 @@ class EngineConfig:
     # content hash; a hit skips the ENCODING stage entirely
     encoder_cache: bool = True
     encoder_cache_entries: int = 256
+    # KV prefix cache (ISSUE 4): completed prefills publish their page
+    # chains into the allocator's content-keyed index; later requests
+    # sharing a page-aligned prefix (same system prompt / same mm input)
+    # claim those pages ref-counted instead of re-prefilling them, and the
+    # scheduler ranks them by the *residual* prefill — a fully-cached
+    # video drops from rock to sand priority. Only takes effect when the
+    # executor can share KV (``supports_prefix_cache``); hits change when
+    # work happens, never what is emitted.
+    prefix_cache: bool = True
+    prefix_residual_classify: bool = True   # ablation: rank by full cost
     # seed's brute-force planning (full re-sort + per-token allocate):
     # the decision-equivalence oracle and host-overhead baseline
     legacy_scheduling: bool = False
@@ -100,6 +119,22 @@ class Engine:
         self.encode_queues = QueueManager()
         self.encoder_cache = (EncoderCache(self.config.encoder_cache_entries)
                               if self.config.encoder_cache else None)
+        # KV prefix cache: needs an executor whose KV pages are actually
+        # shareable (sim cost model, or the batched paged ModelExecutor;
+        # the legacy dense-slot path keeps per-request caches and opts out)
+        self.prefix_on = (self.config.prefix_cache and
+                          getattr(self.executor, "supports_prefix_cache",
+                                  True))
+        # publication gate: shareable content ids seen at ingest. A chain
+        # is only published through content at least two requests have
+        # carried — a unique video's thousand-page chain that nothing
+        # can ever match must not bloat the index or the eviction path
+        # (without this, no-duplicate workloads paid ~5x scheduler host
+        # overhead for zero hits)
+        self._prefix_seen: dict[str, int] = {}
+        # newest resident carrier per shareable head cid, for
+        # retro-publication when its content turns popular
+        self._cid_resident: dict[str, Request] = {}
         if self.config.legacy_scheduling:
             self.wait_index = None
             self.encode_index = None
@@ -122,6 +157,35 @@ class Engine:
             i += 1
             vclass, est_prefill, est_kv = self.classifier.classify(
                 req.modality.value, req.text_tokens, req.mm_units)
+            # KV prefix cache: an advisory match (pages are only claimed
+            # at admission) re-classifies by the *residual* prefill — the
+            # modality-aware analogue of automatic prefix caching: a
+            # duplicate video's prompt is mostly cached KV, so it ranks
+            # (and gets an SLO) like the sand it now is
+            if self.prefix_on:
+                crossed = False
+                for cid, _n in req.content_chunks():
+                    if "!" in cid:
+                        break
+                    n_seen = self._prefix_seen.get(cid, 0) + 1
+                    self._prefix_seen[cid] = n_seen
+                    crossed |= n_seen == 2
+                if crossed:
+                    # this arrival just made some prefix content popular:
+                    # if its first carrier is still resident, publish that
+                    # chain now so THIS request can already claim it
+                    self._retro_publish(req.content_chunks()[0][0])
+            if self.prefix_on and self.config.prefix_residual_classify:
+                match = self.allocator.match_prefix(
+                    req.content_chunks(), self._prefix_limit(req))
+                if match.tokens > 0:
+                    # visible to isolated_e2e below (residual SLO); the
+                    # admission-time claim overwrites it with the pages
+                    # actually taken
+                    req.cached_prefix_tokens = match.tokens
+                    res_text, res_mm = req.residual_sizes(match.tokens)
+                    vclass, est_prefill, est_kv = self.classifier.classify(
+                        req.modality.value, res_text, res_mm)
             req.vclass = vclass
             req.est_prefill = est_prefill
             req.est_kv_tokens = est_kv
@@ -134,6 +198,7 @@ class Engine:
             if req.slo == float("inf"):
                 req.slo = self.config.slo_scale * \
                     self.executor.isolated_e2e(req)
+                req.slo_from_engine = True
             # admission control: a request whose context can never fit the
             # total KV capacity is rejected up front (vLLM errors out)
             need = req.prompt_tokens + req.output_tokens
@@ -141,6 +206,10 @@ class Engine:
                     self.allocator.num_pages:
                 req.state = State.REJECTED
                 self.rejected.append(req)
+                if hasattr(self.executor, "release_slot"):
+                    # drop the SLO-profiling state isolated_e2e cached
+                    # for a request that will never run
+                    self.executor.release_slot(req)
                 continue
             # multimodal requests encode before they can prefill; a cached
             # encoder output (same content hash) skips the stage entirely
@@ -172,14 +241,57 @@ class Engine:
             self._victim_view_now = self.now
         return self._victim_view
 
+    def _popular_tokens(self, chunks) -> int:
+        """Token length of the leading run of content ids at least two
+        ingested requests have carried — the publishable prefix."""
+        total = 0
+        for cid, n in chunks:
+            if "!" in cid or self._prefix_seen.get(cid, 0) < 2:
+                break
+            total += n
+        return total
+
+    def _retro_publish(self, head_cid: str) -> None:
+        """Publish the still-resident first carrier of newly-popular
+        content (its completion predated the popularity, so the gate
+        skipped it then). Stale candidates — finished (pages freed) or
+        preempted (KV dropped) — fail the guards and are ignored."""
+        cand = self._cid_resident.get(head_cid)
+        if cand is None or cand.prefilled < cand.prompt_tokens or \
+                self.allocator.owned_pages(cand.rid) == 0:
+            return
+        popular = self._popular_tokens(cand.content_chunks())
+        if popular > 0:
+            self.allocator.publish_prefix(cand.rid, cand.content_chunks(),
+                                          max_tokens=popular)
+
+    def _prefix_limit(self, req: Request) -> int:
+        """Max claimable prefix: the last prompt token must always run
+        through the model (its logits emit the first output token), and
+        the real executor cannot start a row past its context window."""
+        limit = req.prompt_tokens - 1
+        cap = getattr(self.executor, "prefix_token_limit", None)
+        if cap is not None:
+            limit = min(limit, cap)
+        return limit
+
     def _try_admit(self, req: Request) -> bool:
-        """Allocate KV pages for the full prompt; preempt strictly
-        lower-priority victims if needed (no preemption cycles)."""
+        """Allocate KV pages for the full prompt — re-using any cached
+        prefix chain ref-counted — preempting strictly lower-priority
+        victims if needed (no preemption cycles). Preempting a victim
+        only releases pages nobody else references, so the page math
+        below is ref-aware throughout (``can_allocate`` counts evictable
+        cached pages as free and ``allocate`` evicts them on demand)."""
         tokens = req.prompt_tokens
+        match = None
+        if self.prefix_on:
+            match = self.allocator.match_prefix(
+                req.content_chunks(), self._prefix_limit(req))
         tries = 0
         legacy = self.config.legacy_scheduling
         bar = None
-        while not self.allocator.can_allocate(tokens):
+        while not self.allocator.can_allocate(tokens, rid=req.rid,
+                                              match=match):
             if tries >= self.config.max_preemptions_per_iter:
                 return False
             if legacy:
@@ -194,11 +306,27 @@ class Engine:
                 return False
             self._preempt(victim)
             tries += 1
+        claimed, cow_dst = self.allocator.claim_prefix(req.rid, match)
+        req.cached_prefix_tokens = claimed
+        req.prefilled = claimed   # residual prefill only
+        if claimed > 0 and hasattr(self.executor, "on_prefix_claim"):
+            # the COW copy must read the donor before any later eviction
+            # can hand its page out, so the hook runs pre-allocate
+            self.executor.on_prefix_claim(
+                req, claimed,
+                match.cow_src if cow_dst is not None else None, cow_dst)
         self.allocator.allocate(req.rid, tokens)
         return True
 
     def _preempt(self, victim: Request) -> None:
-        """Recompute-style eviction: drop KV, back to the waiting queue."""
+        """Recompute-style eviction: drop KV, back to the waiting queue.
+        A victim whose prefill had completed publishes its chain first
+        (popularity-exempt: the one future request guaranteed to want
+        these exact pages is the victim itself), so unless real pressure
+        evicts them, re-admission re-claims instead of re-prefilling."""
+        if self.prefix_on and victim.prefilled >= victim.prompt_tokens:
+            self.allocator.publish_prefix(victim.rid,
+                                          victim.content_chunks())
         self.allocator.free(victim.rid)
         self.running.pop(victim, None)
         self.prefilling.pop(victim, None)
@@ -212,12 +340,31 @@ class Engine:
         victim.state = State.PREEMPTED
         self.queues.push(victim, self.now)
 
+    def _reprice(self, req: Request) -> None:
+        """The admission-time claim diverged from the ingest advisory —
+        the chain was evicted while the request queued (claim shrank) or
+        published meanwhile (claim grew). Re-derive class and SLO from
+        the pages actually claimed, so victim eligibility and SLO
+        accounting track the work really left; caller-provided SLOs are
+        never touched. Runs after the queue exit: mutating ``vclass``
+        while queued would desync the per-class queues."""
+        res_text, res_mm = req.residual_sizes(req.cached_prefix_tokens)
+        req.vclass, req.est_prefill, req.est_kv_tokens = \
+            self.classifier.classify(req.modality.value, res_text, res_mm)
+        if req.slo_from_engine:
+            req.slo = self.config.slo_scale * \
+                self.executor.isolated_e2e(req)
+
     def _admit(self, req: Request) -> bool:
         """Waiting -> prefilling transition (shared by both plan paths).
         Caller checks the max_num_seqs cap first."""
+        advisory = req.cached_prefix_tokens
         if not self._try_admit(req):
             return False
         self.queues.remove(req)
+        if self.prefix_on and self.config.prefix_residual_classify and \
+                req.cached_prefix_tokens != advisory:
+            self._reprice(req)
         if req.preempted_at is not None:
             req.preempted_time += self.now - req.preempted_at
             req.preempted_at = None
@@ -440,12 +587,38 @@ class Engine:
             if req not in self.prefilling:
                 continue  # preempted later in the same planning pass
             req.prefilled += chunk
+            if self.prefix_on and req.prefilled < req.prompt_tokens:
+                # progressive in-flight publication: pages this chunk
+                # completed are final KV — publishing popular content as
+                # it lands lets a duplicate admitted mid-prefill already
+                # share the written prefix instead of racing a second
+                # full prefill (gated, so one-off content costs nothing)
+                chunks = req.content_chunks()
+                popular = min(self._popular_tokens(chunks),
+                              (req.prefilled // page) * page)
+                if popular > 0:
+                    self.allocator.publish_prefix(req.rid, chunks,
+                                                  max_tokens=popular)
             if req.prefilled >= req.prompt_tokens:
                 req.first_token_time = self.now  # prefill iter emits token 1
                 req.decoded = 1
                 req.state = State.RUNNING
                 del self.prefilling[req]
                 self.running[req] = None
+                if self.prefix_on:
+                    # the prompt KV is final (decode writes only past it):
+                    # publish the page chain for later requests, truncated
+                    # to the popular prefix (content ids at least two
+                    # requests have carried) so one-off content never
+                    # grows the index; register as the resident carrier
+                    # for retro-publication if popularity comes later
+                    chunks = req.content_chunks()
+                    if chunks and "!" not in chunks[0][0]:
+                        self._cid_resident[chunks[0][0]] = req
+                    popular = self._popular_tokens(chunks)
+                    if popular > 0:
+                        self.allocator.publish_prefix(req.rid, chunks,
+                                                      max_tokens=popular)
                 # paged coverage: next iteration's decode writes KV at
                 # position prompt_tokens, so when the prompt exactly fills
                 # its pages the admission allocation has no slack — grow

@@ -132,6 +132,10 @@ class SimExecutor:
     across iterations so tests can assert work conservation.
     """
 
+    # the sim's "KV" is pure accounting, so shared prefix pages cost
+    # nothing to honor: residual chunks simply never reach the cost model
+    supports_prefix_cache = True
+
     def __init__(self, cost_model: CostModel, decode_block: int = 1,
                  overlap: bool = True):
         self.cm = cost_model
@@ -140,6 +144,7 @@ class SimExecutor:
         self.encode_seconds = 0.0    # vision-encode stage time
         self.overlap_saved_seconds = 0.0
         self.busy_seconds = 0.0      # sum of returned iteration durations
+        self.prefill_tokens = 0      # prompt tokens actually prefilled
 
     def preprocess_delay(self, req: Request) -> float:
         return self.cm.preprocess_time(req)
@@ -159,13 +164,22 @@ class SimExecutor:
         (SLO assignment), so the decode sum over
         ``decode_time(1, prompt + i) for i < output_tokens`` is evaluated in
         closed form: the cost model is affine in context, so the sum is an
-        arithmetic series — O(1) instead of an O(output_tokens) loop."""
+        arithmetic series — O(1) instead of an O(output_tokens) loop.
+
+        A cached KV prefix (``req.cached_prefix_tokens``) shrinks the
+        prefill term to the residual tokens (attention still reads the
+        cached context), so the SLO ranks by the work actually left."""
         rec = self.isolated_run(req)
+        ttft = rec.ttft
+        cached = min(req.cached_prefix_tokens, max(req.prompt_tokens - 1, 0))
+        if cached > 0:
+            ttft = (rec.preprocess_time + rec.encode_time +
+                    self.cm.prefill_time(req.prompt_tokens - cached, cached))
         n = req.output_tokens
         base = self.cm.decode_time(1, 0)          # weights + batch FLOPs term
         kv_coef = self.cm.kv_bytes_per_token / self.cm.hbm_bw
         ctx_sum = n * req.prompt_tokens + n * (n - 1) // 2
-        return rec.ttft + n * base + kv_coef * ctx_sum
+        return ttft + n * base + kv_coef * ctx_sum
 
     # -- engine interface ----------------------------------------------------
     def run_iteration(self, prefill_work, decode_reqs, encode_work) -> float:
@@ -186,6 +200,7 @@ class SimExecutor:
             t_llm += self.cm.c_base
             for r, c in prefill_work:
                 t_llm += self.cm.prefill_time(c, r.prefilled)
+                self.prefill_tokens += c
         if decode_reqs:
             ctx = sum(r.prompt_tokens + r.decoded for r in decode_reqs)
             t_llm += self.cm.decode_time(len(decode_reqs), ctx)
@@ -264,6 +279,10 @@ class ModelExecutor:
             page_size=page_size)
         self._stores = None           # lazy: [{bname: PagedStackStore}]
         self._ctx: dict[str, int] = {}        # KV tokens written per rid
+        self._isolated_ttft: dict[str, float] = {}  # measured profile
+        #   prefill per rid: repricing an SLO at admission (prefix claim
+        #   shifted) must not re-run a profile prefill — the pool may be
+        #   full at that point
         self.emitted: dict[str, list[int]] = {}
         self._finished_rids = deque()
         self._prompt_cache: dict[str, np.ndarray] = {}
@@ -279,6 +298,15 @@ class ModelExecutor:
             lambda params, tokens, positions, cache, q_start:
             self.T.forward(params, self.cfg, tokens, positions=positions,
                            cache=cache, q_start=q_start))
+        # prefix-cache COW: copy one page donor->private across every
+        # layer stack in one fused call; src/dst are traced, so a single
+        # jit signature serves every copy
+        from repro.cache.paged import PagedStackStore
+        self._cow_jit = jax.jit(
+            lambda stores, src, dst: jax.tree.map(
+                lambda s: s.copy_page(src, dst), stores,
+                is_leaf=lambda x: isinstance(x, PagedStackStore)),
+            donate_argnums=(0,))
 
     # -- plumbing -----------------------------------------------------------
     def bind_allocator(self, allocator) -> None:
@@ -320,6 +348,36 @@ class ModelExecutor:
         return stores
 
     @property
+    def supports_prefix_cache(self) -> bool:
+        """Only the batched paged path shares KV between requests; the
+        legacy dense-slot oracle keeps per-request caches and opts out
+        (the engine then never claims or publishes)."""
+        return not self.legacy
+
+    @property
+    def prefix_token_limit(self) -> int:
+        """Cap on claimable prefix tokens: a claimed row must still start
+        inside the context window so its residual chunk can run."""
+        return max(0, self.max_len - 8)
+
+    def on_prefix_claim(self, req: Request, tokens: int,
+                        cow_src: int | None = None,
+                        cow_dst: int | None = None) -> None:
+        """Engine hook at admission: the claimed prefix's KV already sits
+        in shared pages (rows 0.. of this request's block table), so
+        writes and rope start at ``tokens``; the partially-shared
+        boundary page is copied donor->private in one fused jit call."""
+        self._ctx[req.rid] = int(tokens)
+        self.emitted.pop(req.rid, None)   # recompute re-claims cleanly
+        if cow_src is None or cow_dst is None:
+            return
+        if self._stores is None:
+            self._stores = self._make_stores()
+        self._stores = self._cow_jit(self._stores,
+                                     self.jnp.int32(cow_src),
+                                     self.jnp.int32(cow_dst))
+
+    @property
     def max_pages(self) -> int:
         """Block-table width: fixed at the per-request context cap so the
         gathered context length always equals the legacy dense cache's
@@ -331,12 +389,27 @@ class ModelExecutor:
     def _prompt_tokens(self, req: Request) -> np.ndarray:
         toks = self._prompt_cache.get(req.rid)
         if toks is None:
-            # stable digest: abs(hash(rid)) varied across processes under
-            # PYTHONHASHSEED, so real-mode runs did not reproduce
-            seed = zlib.crc32(req.rid.encode()) & 0x7FFFFFFF
-            rng = np.random.default_rng(seed)
-            toks = rng.integers(1, self.cfg.vocab_size,
-                                size=req.prompt_tokens, dtype=np.int64)
+            chunks = req.content_chunks()
+            if len(chunks) == 1 and chunks[0][0] == f"txt!{req.rid}":
+                # fully-private prompt: the historical rid-seeded stream
+                # (stable digest: abs(hash(rid)) varied across processes
+                # under PYTHONHASHSEED, so real-mode runs did not
+                # reproduce)
+                seed = zlib.crc32(req.rid.encode()) & 0x7FFFFFFF
+                toks = np.random.default_rng(seed).integers(
+                    1, self.cfg.vocab_size, size=req.prompt_tokens,
+                    dtype=np.int64)
+            else:
+                # per-segment streams seeded by *content id*: requests
+                # carrying the same system prompt or mm payload see
+                # identical tokens there, so a shared prefix page's KV
+                # really is interchangeable between them
+                toks = np.concatenate([
+                    np.random.default_rng(
+                        zlib.crc32(cid.encode()) & 0x7FFFFFFF).integers(
+                        1, self.cfg.vocab_size, size=n, dtype=np.int64)
+                    for cid, n in chunks]) if chunks else \
+                    np.zeros(0, np.int64)
             self._prompt_cache[req.rid] = toks
         return toks
 
@@ -364,8 +437,12 @@ class ModelExecutor:
         """Drop a request's executor-side state (engine calls this on
         preemption and on finish)."""
         self._ctx.pop(req.rid, None)
-        if req.state is State.FINISHED:
+        if req.state in (State.FINISHED, State.REJECTED):
+            # rejected requests carry the *largest* prompts (admission
+            # control bounces what exceeds total KV), so their profile
+            # memo and token arrays must not outlive them either
             self._prompt_cache.pop(req.rid, None)
+            self._isolated_ttft.pop(req.rid, None)
             if req.rid in self.emitted:
                 self._finished_rids.append(req.rid)
                 while len(self._finished_rids) > self.EMITTED_RETAIN:
@@ -411,8 +488,16 @@ class ModelExecutor:
             preprocess_time=0.0, encode_time=0.0, prefill_time=prefill)
 
     def isolated_e2e(self, req: Request) -> float:
-        rec = self.isolated_run(req)
-        return rec.ttft * (1 + 0.1 * req.output_tokens)
+        ttft = self._isolated_ttft.get(req.rid)
+        if ttft is None:
+            ttft = self.isolated_run(req).ttft
+            self._isolated_ttft[req.rid] = ttft
+        cached = min(req.cached_prefix_tokens, max(req.prompt_tokens - 1, 0))
+        if cached > 0 and req.prompt_tokens > 0:
+            # measured prefill is ~linear in tokens at these sizes: price
+            # only the residual the request will actually run
+            ttft *= (req.prompt_tokens - cached) / req.prompt_tokens
+        return ttft * (1 + 0.1 * req.output_tokens)
 
     def encode_chunk(self, req: Request, units: int) -> None:
         """Vision-encoder stage hook. The reduced models ship no real

@@ -45,6 +45,11 @@ def summarize(reqs: list[Request]) -> dict:
                                 else 0.0),
             "encode_cache_hit_rate": (sum(r.encode_cache_hit for r in mm)
                                       / len(mm) if mm else 0.0),
+            # KV prefix cache: prompt tokens served from cached pages
+            "cached_prefix_tokens": int(sum(r.cached_prefix_tokens
+                                            for r in rs)),
+            "prefix_hit_rate": (sum(r.cached_prefix_tokens > 0 for r in rs)
+                                / len(rs)),
         }
     return out
 

@@ -44,6 +44,10 @@ class Request:        # engine's running/prefilling sets (rids are unique)
     output_tokens: int = 32    # decode length target
     mm_hash: str | None = None  # content hash of the mm input (encoder-cache
     #                             key; None = uncacheable / no mm payload)
+    # shared leading text (system prompt / few-shot template): identifies
+    # content, so equal ids => equal tokens (KV prefix-cache key)
+    shared_prefix_id: str | None = None
+    shared_prefix_tokens: int = 0   # leading text tokens drawn from that id
 
     # ---- derived / filled by the pipeline ----
     prompt_tokens: int = 0     # total LLM prompt tokens (text + mm embeds)
@@ -63,6 +67,9 @@ class Request:        # engine's running/prefilling sets (rids are unique)
     enqueue_time: float = 0.0  # when (re-)entered the waiting queue
     encoded_units: int = 0     # mm units encoded so far (chunked encode)
     encode_cache_hit: bool = False  # encoder output served from the cache
+    cached_prefix_tokens: int = 0   # prompt tokens served from the KV
+    #                                 prefix cache (advisory at ingest,
+    #                                 actual claim at admission)
 
     # ---- metrics ----
     encode_start_time: float | None = None   # first encode chunk scheduled
@@ -74,6 +81,51 @@ class Request:        # engine's running/prefilling sets (rids are unique)
     preempted_time: float = 0.0
     preempted_at: float | None = None
     slo: float = float("inf")  # absolute latency target (seconds, e2e)
+    slo_from_engine: bool = False  # engine-assigned (scale x isolated) vs
+    #                                caller-provided: only the former may be
+    #                                re-derived when cache state shifts
+    _chunks_cache: tuple | None = None  # memoized content_chunks()
+
+    def content_chunks(self) -> tuple:
+        """The prompt as ``(content_id, tokens)`` segments in canonical
+        MLLM order — [shared system prefix][mm payload][private text] —
+        the structural identity the KV prefix cache hashes page-by-page.
+        Ids are equal across requests exactly when the underlying content
+        is (same system prompt / same mm input); private segments carry a
+        ``!`` and the rid, so they can never match another request.
+        Cached: the layout is fixed at construction and this sits on the
+        per-request scheduling hot path."""
+        if self._chunks_cache is not None:
+            return self._chunks_cache
+        chunks = []
+        used = 0
+        if self.shared_prefix_tokens > 0 and self.shared_prefix_id:
+            n = min(self.shared_prefix_tokens, self.prompt_tokens)
+            chunks.append((f"sys:{self.shared_prefix_id}", n))
+            used += n
+        if self.mm_units > 0 and used < self.prompt_tokens:
+            cid = (f"mm:{self.mm_hash}" if self.mm_hash
+                   else f"mm!{self.rid}")
+            n = min(self.mm_units, self.prompt_tokens - used)
+            chunks.append((cid, n))
+            used += n
+        if used < self.prompt_tokens:
+            chunks.append((f"txt!{self.rid}", self.prompt_tokens - used))
+        self._chunks_cache = tuple(chunks)
+        return self._chunks_cache
+
+    def residual_sizes(self, cached_tokens: int) -> tuple[int, int]:
+        """(text_tokens, mm_units) NOT covered by a cached prefix of
+        ``cached_tokens`` — what the classifier should rank: a fully
+        cached video has the residual prefill of a text request."""
+        rem_mm = 0
+        off = 0
+        for cid, n in self.content_chunks():
+            if cid.startswith("mm"):
+                rem_mm += n - max(0, min(n, cached_tokens - off))
+            off += n
+        rem_text = max(0, self.prompt_tokens - cached_tokens) - rem_mm
+        return max(0, rem_text), max(0, rem_mm)
 
     def ttft(self) -> float | None:
         if self.first_token_time is None:

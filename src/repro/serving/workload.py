@@ -47,6 +47,15 @@ class WorkloadConfig:
     # stream identical to the historical generator (seeded workloads and
     # committed baselines are unchanged).
     duplicate_prob: float = 0.0
+    # P(a text request opens with one of `shared_prefix_pool` fixed
+    # system prompts) — exercises the KV prefix cache with page-aligned
+    # shared text prefixes. Like duplicate_prob, 0.0 draws nothing from
+    # the RNG, so seeded workloads and committed BENCH_*.json streams
+    # stay byte-identical.
+    shared_prefix_prob: float = 0.0
+    shared_prefix_pool: int = 4
+    shared_prefix_tokens_min: int = 64
+    shared_prefix_tokens_max: int = 256
 
 
 def generate(cfg: WorkloadConfig) -> list[Request]:
@@ -63,14 +72,31 @@ def generate(cfg: WorkloadConfig) -> list[Request]:
     # that duplicate_prob draws from (the same image re-asked with a new
     # question shares the hash AND the patch count — content identity)
     pools: dict[str, list[tuple[str, int]]] = {"image": [], "video": []}
+    # fixed system-prompt pool (shared_prefix_prob): sizes come from a
+    # separate RNG so enabling the knob leaves the main stream's draws
+    # for sizes/arrivals untouched
+    sys_pool: list[tuple[str, int]] = []
+    if cfg.shared_prefix_prob > 0:
+        prng = np.random.default_rng(cfg.seed + 0x5F5)
+        sys_pool = [
+            (f"s{cfg.seed}-{j}",
+             int(prng.integers(cfg.shared_prefix_tokens_min,
+                               cfg.shared_prefix_tokens_max + 1)))
+            for j in range(cfg.shared_prefix_pool)]
     for i, (mod, t) in enumerate(zip(modalities, arrivals)):
         out_toks = int(np.clip(rng.lognormal(
             cfg.out_tokens_log_mu, cfg.out_tokens_log_sigma), 4, 1024))
         mm_hash = None
+        shared_id, shared_toks = None, 0
         if mod == "text":
             text = int(np.clip(rng.lognormal(
                 cfg.text_tokens_log_mu, cfg.text_tokens_log_sigma), 10, 10000))
             mm = 0
+            if sys_pool and rng.uniform() < cfg.shared_prefix_prob:
+                shared_id, shared_toks = \
+                    sys_pool[int(rng.integers(len(sys_pool)))]
+                text += shared_toks   # the system prompt precedes the
+                #                       question in the prompt layout
         else:
             text = int(np.clip(rng.lognormal(3.6, 0.6), 8, 256))
             if cfg.duplicate_prob > 0 and pools[mod] and \
@@ -90,7 +116,8 @@ def generate(cfg: WorkloadConfig) -> list[Request]:
         reqs.append(Request(
             rid=f"r{i:05d}", modality=Modality(mod), arrival=float(t),
             text_tokens=text, mm_units=mm, output_tokens=out_toks,
-            prompt_tokens=text + mm, mm_hash=mm_hash))
+            prompt_tokens=text + mm, mm_hash=mm_hash,
+            shared_prefix_id=shared_id, shared_prefix_tokens=shared_toks))
     return reqs
 
 
