@@ -9,8 +9,11 @@ from __future__ import annotations
 import jax
 
 from .paged_attention import paged_attention as _paged
+from .paged_prefill_attention import \
+    paged_prefill_attention as _paged_prefill
 from .prefill_attention import prefill_attention as _prefill
-from .ref import ref_paged_attention, ref_prefill_attention
+from .ref import (ref_paged_attention, ref_paged_prefill_attention,
+                  ref_prefill_attention)
 
 # flipped to False on real TPU deployments
 INTERPRET = jax.default_backend() != "tpu"
@@ -32,3 +35,12 @@ def paged_attention(q, k_pages, v_pages, block_table, lengths, *, softcap=0.0,
                                    softcap=softcap)
     return _paged(q, k_pages, v_pages, block_table, lengths, softcap=softcap,
                   interpret=INTERPRET)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, q_start,
+                            new_lens, *, softcap=0.0, use_kernel=True):
+    if not use_kernel:
+        return ref_paged_prefill_attention(q, k_pages, v_pages, block_table,
+                                           q_start, new_lens, softcap=softcap)
+    return _paged_prefill(q, k_pages, v_pages, block_table, q_start, new_lens,
+                          softcap=softcap, interpret=INTERPRET)

@@ -107,15 +107,22 @@ def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
         _kernel, page_size=page_size, max_pages=max_pages, softcap=softcap,
         sm_scale=1.0 / math.sqrt(orig_hd))
 
+    def _kv_map(b, p, bt, ln):
+        # grid steps past the row's live pages are predicated off by
+        # @pl.when(p < n_pages), but the BlockSpec pipeline would still
+        # stage bt[b, p] (a trash/padding page) HBM→VMEM every masked
+        # step; clamping to the row's last valid page makes those steps
+        # restage an already-resident page — a no-op DMA — instead
+        last = jnp.maximum((ln[b] + page_size - 1) // page_size - 1, 0)
+        return (bt[b, jnp.minimum(p, last)], 0, 0, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, max_pages),
         in_specs=[
             pl.BlockSpec((1, KV, G, hd), lambda b, p, bt, ln: (b, 0, 0, 0)),
-            pl.BlockSpec((1, page_size, KV, hd),
-                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
-            pl.BlockSpec((1, page_size, KV, hd),
-                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, KV, hd), _kv_map),
+            pl.BlockSpec((1, page_size, KV, hd), _kv_map),
         ],
         out_specs=pl.BlockSpec((1, KV, G, hd), lambda b, p, bt, ln: (b, 0, 0, 0)),
         scratch_shapes=[

@@ -1,0 +1,162 @@
+"""Paged chunked-prefill flash attention Pallas kernel (TPU target).
+
+The serving engine's prefill hot-spot on the batched paged path: each
+row's chunk of Sq queries (global positions q_start[b]..q_start[b]+
+new_lens[b]) attends causally over that row's block-table-indexed pages —
+the chunk's own K/V have already been scattered into the pages, so the
+kernel reads context exclusively through the table. This replaces the
+gather-pages-then-dense-mha materialization: attention traffic scales
+with the table width the caller passes (length-bucketed by the executor)
+instead of the context cap.
+
+Grid: (B, max_pages) — page axis innermost, same scalar-prefetch pattern
+as the decode kernel (``paged_attention``): the block table, per-row
+``q_start`` and ``new_lens`` ride in SMEM so the BlockSpec index_map can
+stage exactly the needed K/V page HBM→VMEM per step. Online softmax
+across key pages with the (Sq, KV, G, hd) accumulator in VMEM scratch;
+per-row causal masking against the ragged ``q_start``/``new_lens``
+vectors. Steps past a row's last live page are predicated off AND their
+index_map is clamped to the last valid page, so masked steps restage a
+resident page instead of DMAing a fresh one.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_table, q_start, new_lens, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size: int, max_pages: int,
+            softcap: float, sm_scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    total = q_start[b] + new_lens[b]
+    n_pages = (total + page_size - 1) // page_size
+
+    @pl.when(p < n_pages)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)          # (Sq, KV, G, hd)
+        k = k_ref[0].astype(jnp.float32)          # (page_size, KV, hd)
+        v = v_ref[0].astype(jnp.float32)
+
+        s = jnp.einsum("skgd,tkd->skgt", q, k) * sm_scale  # (Sq, KV, G, T)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start[b] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        tpos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+        # causal over history + chunk; the total clamp only matters for
+        # padding queries (i >= new_lens), whose outputs are discarded —
+        # it keeps them off stale page tails all the same
+        s = jnp.where((tpos <= qpos) & (tpos < total), s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (Sq, KV, G, 1)
+        m_cur = jnp.max(s, axis=3, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pexp = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(pexp, axis=3, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.einsum("skgt,tkd->skgd",
+                                                         pexp, v)
+        m_ref[...] = m_new
+
+    @pl.when(p == max_pages - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+LANE = 128     # TPU lane width: last dim of every tile
+SUBLANE = 8    # f32 sublane width: second-to-last dim
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_prefill_attention(q, k_pages, v_pages, block_table, q_start,
+                            new_lens, *, softcap: float = 0.0,
+                            interpret: bool = True):
+    """q: (B,Sq,H,hd) right-padded chunks; k_pages/v_pages:
+    (P,page_size,KV,hd) — already containing the chunk's K/V;
+    block_table: (B,max_pages) int32; q_start: (B,) int32 context tokens
+    before each chunk; new_lens: (B,) int32 valid chunk tokens (<= Sq).
+    -> (B,Sq,H,hd); outputs at padding positions (i >= new_lens[b]) are
+    exact zeros, matching ``ref_paged_prefill_attention``.
+
+    Small ``head_dim``/``KV`` are zero-padded up to the TPU tile minima
+    (lane 128 / sublane 8), exactly as in the decode kernel — zero
+    padding is exact and ``sm_scale`` always uses the original head_dim.
+    """
+    B, Sq, H, hd = q.shape
+    P, page_size, KV, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    orig_kv, orig_hd = KV, hd
+    if hd % LANE or KV % SUBLANE:
+        hd_p = _round_up(hd, LANE)
+        kv_p = _round_up(KV, SUBLANE)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, kv_p - KV), (0, 0),
+                          (0, hd_p - hd)))
+        k_pages = jnp.pad(
+            k_pages, ((0, 0), (0, 0), (0, kv_p - KV), (0, hd_p - hd)))
+        v_pages = jnp.pad(
+            v_pages, ((0, 0), (0, 0), (0, kv_p - KV), (0, hd_p - hd)))
+        KV, hd = kv_p, hd_p
+
+    kernel = functools.partial(
+        _kernel, page_size=page_size, max_pages=max_pages, softcap=softcap,
+        sm_scale=1.0 / math.sqrt(orig_hd))
+
+    def _kv_map(b, p, bt, qs, nl):
+        # clamp padded grid steps to the row's last live page: the
+        # @pl.when(p < n_pages) predicate discards the compute, and the
+        # clamped index means the DMA restages an already-resident page
+        # instead of streaming a fresh one per masked step
+        last = jnp.maximum((qs[b] + nl[b] + page_size - 1) // page_size - 1,
+                           0)
+        return (bt[b, jnp.minimum(p, last)], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, Sq, KV, G, hd),
+                         lambda b, p, bt, qs, nl: (b, 0, 0, 0, 0)),
+            pl.BlockSpec((1, page_size, KV, hd), _kv_map),
+            pl.BlockSpec((1, page_size, KV, hd), _kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, Sq, KV, G, hd),
+                               lambda b, p, bt, qs, nl: (b, 0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sq, KV, G, 1), jnp.float32),
+            pltpu.VMEM((Sq, KV, G, 1), jnp.float32),
+            pltpu.VMEM((Sq, KV, G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, q_start, new_lens, qg, k_pages, v_pages)
+    out = out[:, :, :orig_kv, :, :orig_hd]
+    # padding queries (and whole padding rows): exact zeros, like the ref
+    pad = jnp.arange(Sq, dtype=jnp.int32)[None, :] < new_lens[:, None]
+    out = jnp.where(pad[:, :, None, None, None], out, 0.0)
+    return out.reshape(B, Sq, H, orig_hd)

@@ -37,10 +37,15 @@ def build_stack(arch: str, executor_kind: str = "sim", *,
         prof_reqs = profiling_workload()
     else:
         # "real" = batched paged path; "real-legacy" = the seed's
-        # sequential dense-slot oracle (token-parity baseline)
+        # sequential dense-slot oracle (token-parity baseline). An
+        # explicit kv_pages sizes the executor's paged stores directly —
+        # KV capacity decoupled from the max_slots x max_len slot
+        # geometry (prefix-cache-heavy configs want far more resident
+        # KV than the running set's context windows).
         executor = ModelExecutor(get_reduced(arch), max_slots=16,
                                  max_len=256,
-                                 legacy=(executor_kind == "real-legacy"))
+                                 legacy=(executor_kind == "real-legacy"),
+                                 num_pages=kv_pages)
         prof_reqs = profiling_workload(n_per_modality=8)
         if kv_pages is None:
             # real mode: KV capacity = the executor's paged-store capacity

@@ -198,10 +198,14 @@ def paged_attention_block(x, p, cfg: ModelConfig, *, positions, store, ctx,
       lengths (B,) int32 — context tokens already written per sequence;
       new_lens (B,) int32 — valid new tokens per row (<= S).
     impl: 'kernel' routes S==1 decode through the Pallas paged-attention
-    kernel (native on TPU, interpret elsewhere); 'gather' is the pure-JAX
-    path — gather pages to a contiguous context and run the same ``mha``
-    the dense slot cache uses, so batched decode/prefill stays numerically
-    aligned with the sequential legacy executor (token-parity oracle).
+    kernel and S>1 chunked prefill through the paged-prefill flash kernel
+    (native on TPU, interpret elsewhere) — both attend directly over
+    block-table-indexed pages, no contiguous-context materialization;
+    'gather' is the pure-JAX path — gather the table-width context and
+    run the same ``mha`` the dense slot cache uses. Either way the
+    attention geometry is the block table's width, which the executor
+    length-buckets to the batch's live context (DESIGN.md §Ragged paged
+    execution), so traffic scales with live context rather than the cap.
 
     Returns (out (B, S, D), new_store).
     """
@@ -218,6 +222,11 @@ def paged_attention_block(x, p, cfg: ModelConfig, *, positions, store, ctx,
         out = kops.paged_attention(
             q[:, 0], store.k_pages, store.v_pages, bt, lengths + new_lens,
             softcap=cfg.logit_softcap)[:, None]
+    elif impl == "kernel":
+        from repro.kernels import ops as kops
+        out = kops.paged_prefill_attention(
+            q, store.k_pages, store.v_pages, bt, lengths, new_lens,
+            softcap=cfg.logit_softcap)
     else:
         ck, cv = store.gather_batch(bt)      # (B, max_pages*page, KV, hd)
         Tk = ck.shape[1]

@@ -23,6 +23,11 @@ MIXES = {
     "T0": {"text": 1.0, "image": 0.0, "video": 0.0},
     "ML": {"text": 0.85, "image": 0.10, "video": 0.05},
     "MH": {"text": 0.50, "image": 0.30, "video": 0.20},
+    # long-context video: most requests are rocks whose prompts sit near
+    # the context cap (see long_context_video below) — the regime where
+    # ragged paged geometry matters, since a fixed-width block table
+    # charges the co-scheduled sand these rocks' context price
+    "LCV": {"text": 0.30, "image": 0.10, "video": 0.60},
 }
 
 
@@ -119,6 +124,27 @@ def generate(cfg: WorkloadConfig) -> list[Request]:
             prompt_tokens=text + mm, mm_hash=mm_hash,
             shared_prefix_id=shared_id, shared_prefix_tokens=shared_toks))
     return reqs
+
+
+def long_context_video(cap_tokens: int, *, num_requests: int = 64,
+                       rate: float = 1.0, seed: int = 0) -> WorkloadConfig:
+    """Long-context video preset: an LCV-mix workload whose video rocks
+    carry prompts near ``cap_tokens`` (the serving context cap).
+
+    Frame counts are sized so a max-frame video plus its text lands just
+    under the cap (~90%, leaving decode headroom) and the minimum stays
+    above half of it — every video is a genuine rock, not a pebble. The
+    executor context-sweep benchmark draws its long-context rung from
+    this preset (benchmarks/real_executor.py), so the committed numbers
+    exercise the regime the ROADMAP's video north-star cares about.
+    """
+    patches = 196
+    frames_max = max(1, (cap_tokens * 9 // 10) // patches)
+    frames_min = max(1, frames_max // 2)
+    return WorkloadConfig(
+        mix="LCV", rate=rate, num_requests=num_requests, seed=seed,
+        video_frames_min=frames_min, video_frames_max=frames_max,
+        video_patches_per_frame=patches)
 
 
 def profiling_workload(seed: int = 1234, n_per_modality: int = 120) -> list[Request]:
