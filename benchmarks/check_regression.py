@@ -25,6 +25,11 @@ blocking it:
     (cache on/off/legacy) and the sim hit/COW/reclassification counts
     are exact gates; the prefill-token savings and TTFT improvements are
     deterministic sim floats checked within the small tolerance.
+  * ``BENCH_faults.json`` — chaos harness. All gates are exact and
+    wall-clock-free: zero allocator invariant violations, zero leaked
+    pages/encoder-cache pin refs, failover loses/double-finishes
+    nothing, and the installed-but-empty faults layer is a bit-exact
+    no-op (sim timings and real emitted tokens).
 
     PYTHONPATH=src python -m benchmarks.check_regression [--skip-wallclock]
 """
@@ -228,11 +233,42 @@ def check_prefix_baseline(failures: list[str]) -> None:
                         "longer emit bit-identical tokens")
 
 
+def check_faults_baseline(failures: list[str]) -> None:
+    path = ROOT / "BENCH_faults.json"
+    if not path.exists():
+        failures.append("BENCH_faults.json missing - run "
+                        "`python -m benchmarks.run --only fault_tolerance`")
+        return
+    json.loads(path.read_text())  # baseline must at least parse
+    from benchmarks.fault_tolerance import measure
+    fresh = measure(fast=True)
+    gates = fresh["gates"]
+    # every gate is exact: these are correctness invariants, not perf
+    exact_zero = ["invariant_violations", "leaked_pages", "leaked_pins",
+                  "in_flight", "lost", "double_finished"]
+    for name in exact_zero:
+        got = gates[name]
+        status = "ok" if got == 0 else "REGRESSION"
+        print(f"  faults/{name}: {got}  [{status}]")
+        if status != "ok":
+            failures.append(f"faults/{name}: {got} != 0")
+    ident = gates["fault_free_identical"]
+    print(f"  faults/fault_free_identical: {ident}  "
+          f"[{'ok' if ident else 'REGRESSION'}]")
+    if not ident:
+        failures.append("faults/fault_free_identical: empty FaultPlan is "
+                        "no longer a bit-exact no-op")
+    if gates["redispatched"] <= 0:
+        failures.append("faults/redispatched: failover path never "
+                        "exercised (0 re-dispatches)")
+
+
 def main(argv: list[str]) -> int:
     failures: list[str] = []
     print("== perf regression gate ==")
     check_encode_baseline(failures)
     check_prefix_baseline(failures)
+    check_faults_baseline(failures)
     check_executor_baseline(failures,
                             skip_wallclock="--skip-wallclock" in argv)
     if "--skip-wallclock" not in argv:

@@ -1,0 +1,275 @@
+"""Chaos benchmark (ISSUE 6): the serving tier under an escalating,
+fully-deterministic fault schedule.
+
+Three experiments, all seeded (``--seed`` reproduces a CI failure):
+
+* **Escalation** — one engine under ``FaultRates.scaled(f)`` for rising
+  ``f`` (client cancels at every lifecycle stage, per-request deadlines,
+  encoder-chunk faults with retry/backoff, transient and permanent
+  executor step faults) with load-shedding armed. Exact gates per rung:
+  zero allocator invariant violations, zero leaked KV pages, zero leaked
+  encoder-cache pin refs, and every request in exactly one terminal
+  state. Reported: the goodput/TTFT degradation curve vs fault rate.
+* **Failover** — multi-replica stepped co-simulation; the fault plan
+  kills one replica mid-run. Exact gates: every in-flight request is
+  re-dispatched to a survivor (none lost), no request finishes twice,
+  surviving replicas stay invariant-clean with zero leaks. Reported:
+  recovery time (kill -> last re-dispatched request terminal).
+* **Fault-free identity** — the faults layer installed but empty
+  (``FaultPlan()``) must change *nothing*: sim runs keep identical
+  per-request timings/states vs ``faults=None``, and a real-executor run
+  keeps bit-identical emitted tokens. (Identity to *pre-PR* behaviour is
+  additionally pinned by the committed BENCH_encode/prefix/scheduler
+  baselines, which the regression gate checks exactly.)
+
+Full mode writes ``BENCH_faults.json`` (the committed baseline checked
+by benchmarks/check_regression.py):
+
+    PYTHONPATH=src python -m benchmarks.run --only fault_tolerance [--fast]
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor, make_cost_model
+from repro.serving.faults import FaultPlan, FaultRates
+from repro.serving.metrics import goodput, lifecycle_counts, summarize
+from repro.serving.router import Router
+from repro.serving.workload import WorkloadConfig, generate
+
+from .common import csv_row, resolve_seed, stack
+
+BASELINE_PATH = Path(__file__).resolve().parent.parent / "BENCH_faults.json"
+
+POLICY = "tcm"
+DEFAULT_SEED = 7
+# per-request / per-iteration base rates the escalation multiplies; at
+# 1x roughly a fifth of requests see some fault
+BASE_RATES = dict(cancel_prob=0.06, deadline_prob=0.06,
+                  encoder_fault_prob=0.08, step_fault_prob=0.003)
+
+
+def _workload(n: int, seed: int) -> WorkloadConfig:
+    # duplicates + shared prefixes so cancels land mid-COW-claim and
+    # mid-encode-dedup, not just on private pages
+    return WorkloadConfig(mix="MH", rate=2.0, num_requests=n, seed=seed,
+                          duplicate_prob=0.3, shared_prefix_prob=0.3)
+
+
+def _leak_audit(eng: Engine) -> tuple[int, int, int]:
+    """(invariant_violations, leaked_pages, leaked_pin_refs) after a run
+    in which every request reached a terminal state."""
+    violations = 0
+    try:
+        eng.allocator.check_invariants()
+    except AssertionError:
+        violations = 1
+    pins = (eng.encoder_cache.stats()["pin_refs"]
+            if eng.encoder_cache is not None else 0)
+    return violations, eng.allocator.used_pages, pins
+
+
+def run_chaos_rung(factor: float, n: int, seed: int) -> dict:
+    """One engine, one escalation rung."""
+    _ex, _est, smart, _ = stack()
+    cm = make_cost_model("llava-7b")
+    rates = FaultRates(**BASE_RATES).scaled(factor)
+    plan = FaultPlan(seed=seed, rates=rates)
+    # small page pool so pressure, preemption and load-shedding all fire
+    eng = Engine(make_policy(POLICY), SimExecutor(cm), smart,
+                 EngineConfig(kv_pages=2048, token_budget=512,
+                              load_shed=True, shed_after_iters=30),
+                 faults=plan)
+    reqs = generate(_workload(n, seed))
+    eng.run(reqs)
+    counts = lifecycle_counts(reqs)
+    violations, leaked_pages, leaked_pins = _leak_audit(eng)
+    summary = summarize(eng.finished) if eng.finished else None
+    return {
+        "factor": factor,
+        "injected": dict(plan.injected),
+        "lifecycle": counts,
+        "invariant_violations": violations,
+        "leaked_pages": leaked_pages,
+        "leaked_pins": leaked_pins,
+        "shed": eng.shed_count,
+        "goodput": goodput(reqs),
+        "ttft_avg": (summary["overall"]["ttft_avg"]
+                     if summary and summary["overall"] else None),
+    }
+
+
+def run_failover(n: int, seed: int, replicas: int = 3,
+                 kill_time: float = 30.0) -> dict:
+    """Multi-replica co-simulation with one replica killed mid-run."""
+    _ex, _est, smart, _ = stack()
+    cm = make_cost_model("llava-7b")
+    plan = FaultPlan(seed=seed, replica_kills={0: kill_time})
+    router = Router([SimExecutor(cm) for _ in range(replicas)], smart,
+                    EngineConfig(kv_pages=4096, token_budget=512),
+                    policy=POLICY, routing="least-loaded", faults=plan)
+    reqs = generate(_workload(n, seed + 1))
+    router.run_stepped(reqs)
+    # terminal partition: every request in exactly one terminal state,
+    # every rid in at most one replica's terminal lists
+    terminal_rids: list[str] = []
+    finished_rids: list[str] = []
+    for eng in router.engines:
+        for r in eng.finished:
+            finished_rids.append(r.rid)
+        for r in eng.finished + eng.rejected + eng.aborted:
+            terminal_rids.append(r.rid)
+    lost = (n - sum(r.is_terminal for r in reqs)) + len(router.lost)
+    double_finished = len(finished_rids) - len(set(finished_rids))
+    double_terminal = len(terminal_rids) - len(set(terminal_rids))
+    violations = leaked_pages = leaked_pins = 0
+    for i, eng in enumerate(router.engines):
+        if not router.alive[i]:
+            continue  # a crashed replica's memory is gone, not leaked
+        v, pg, pn = _leak_audit(eng)
+        violations += v
+        leaked_pages += pg
+        leaked_pins += pn
+    redis = [r for r in reqs if r.redispatches > 0]
+    kill_at = router.kill_events[0]["time"] if router.kill_events else None
+    recovery = None
+    if kill_at is not None and redis:
+        ends = [r.finish_time if r.finish_time is not None else r.aborted_at
+                for r in redis if r.is_terminal]
+        if ends:
+            recovery = max(ends) - kill_at
+    return {
+        "replicas": replicas,
+        "kill_events": router.kill_events,
+        "redispatched": router.redispatched,
+        "lost": lost,
+        "double_finished": double_finished + double_terminal,
+        "invariant_violations": violations,
+        "leaked_pages": leaked_pages,
+        "leaked_pins": leaked_pins,
+        "recovery_time": recovery,
+        "goodput": goodput(reqs),
+    }
+
+
+def run_fault_free_identity(fast: bool) -> dict:
+    """The installed-but-empty faults layer must be a bit-exact no-op."""
+    def sim_run(plan):
+        _ex, _est, smart, _ = stack()
+        cm = make_cost_model("llava-7b")
+        eng = Engine(make_policy(POLICY), SimExecutor(cm), smart,
+                     EngineConfig(), faults=plan)
+        reqs = generate(_workload(150, DEFAULT_SEED))
+        eng.run(reqs)
+        return {r.rid: (r.state.value, r.finish_time, r.first_token_time,
+                        r.decoded, r.preemptions) for r in reqs}
+
+    sim_identical = sim_run(None) == sim_run(FaultPlan())
+
+    # real executor: emitted token streams with the layer installed
+    from repro.launch.serve import build_stack
+    wl = WorkloadConfig(mix="ML", rate=50.0, num_requests=6, seed=7,
+                        out_tokens_log_mu=1.8, out_tokens_log_sigma=0.3,
+                        text_tokens_log_mu=3.2, text_tokens_log_sigma=0.5,
+                        video_frames_min=1, video_frames_max=2,
+                        image_patches=32, video_patches_per_frame=16,
+                        duplicate_prob=0.5, shared_prefix_prob=0.5,
+                        shared_prefix_tokens_min=20,
+                        shared_prefix_tokens_max=40)
+    emitted = {}
+    for key, plan in (("none", None), ("empty", FaultPlan())):
+        executor, classifier, engine_cfg, _, _ = build_stack(
+            "chatglm3-6b", "real", kv_pages=64)
+        eng = Engine(make_policy(POLICY), executor, classifier, engine_cfg,
+                     faults=plan)
+        eng.run(generate(wl))
+        emitted[key] = {r.rid: executor.emitted.get(r.rid)
+                        for r in eng.finished}
+    real_identical = (emitted["none"] == emitted["empty"]
+                      and len(emitted["none"]) == 6)
+    return {"sim_identical": sim_identical,
+            "real_identical": real_identical}
+
+
+def measure(fast: bool = False) -> dict:
+    seed = resolve_seed(DEFAULT_SEED)
+    factors = [0.0, 2.0] if fast else [0.0, 1.0, 2.0, 4.0]
+    n = 120 if fast else 300
+    escalation = [run_chaos_rung(f, n, seed) for f in factors]
+    failover = run_failover(80 if fast else 240, seed,
+                            replicas=2 if fast else 3)
+    fault_free = run_fault_free_identity(fast)
+    gates = {
+        "invariant_violations": (
+            sum(r["invariant_violations"] for r in escalation)
+            + failover["invariant_violations"]),
+        "leaked_pages": (sum(r["leaked_pages"] for r in escalation)
+                         + failover["leaked_pages"]),
+        "leaked_pins": (sum(r["leaked_pins"] for r in escalation)
+                        + failover["leaked_pins"]),
+        "in_flight": sum(r["lifecycle"]["in_flight"] for r in escalation),
+        "lost": failover["lost"],
+        "double_finished": failover["double_finished"],
+        "redispatched": failover["redispatched"],
+        "fault_free_identical": (fault_free["sim_identical"]
+                                 and fault_free["real_identical"]),
+    }
+    return {"seed": seed, "base_rates": dict(BASE_RATES), "fast": fast,
+            "escalation": escalation, "failover": failover,
+            "fault_free": fault_free, "gates": gates}
+
+
+def assert_gates(gates: dict) -> None:
+    assert gates["invariant_violations"] == 0, gates
+    assert gates["leaked_pages"] == 0, gates
+    assert gates["leaked_pins"] == 0, gates
+    assert gates["in_flight"] == 0, gates
+    assert gates["lost"] == 0, gates
+    assert gates["double_finished"] == 0, gates
+    assert gates["redispatched"] > 0, \
+        "failover never exercised re-dispatch — move the kill earlier"
+    assert gates["fault_free_identical"], \
+        "installed-but-empty faults layer changed behaviour"
+
+
+def main(fast: bool = False):
+    results = measure(fast=fast)
+    rows = []
+    print(f"-- escalation (seed {results['seed']}) --")
+    print(f"{'factor':>7}{'goodput':>9}{'ttft':>8}{'finished':>9}"
+          f"{'cancel':>7}{'failed':>7}{'shed':>6}{'leaks':>6}")
+    for r in results["escalation"]:
+        lc = r["lifecycle"]
+        ttft = r["ttft_avg"] if r["ttft_avg"] is not None else float("nan")
+        print(f"{r['factor']:>7.1f}{r['goodput']:>9.3f}{ttft:>8.3f}"
+              f"{lc['finished']:>9}{lc['cancelled']:>7}{lc['failed']:>7}"
+              f"{r['shed']:>6}{r['leaked_pages'] + r['leaked_pins']:>6}")
+        rows.append(csv_row(f"faults.goodput_x{r['factor']:g}",
+                            r["goodput"]))
+    fo = results["failover"]
+    rec = fo["recovery_time"] if fo["recovery_time"] is not None else -1.0
+    print(f"-- failover: {fo['replicas']} replicas, kill@"
+          f"{fo['kill_events'][0]['time'] if fo['kill_events'] else '-'} "
+          f"redispatched {fo['redispatched']} lost {fo['lost']} "
+          f"double {fo['double_finished']} recovery {rec:.2f}s")
+    ff = results["fault_free"]
+    print(f"-- fault-free identity: sim {ff['sim_identical']} "
+          f"real {ff['real_identical']}")
+    assert_gates(results["gates"])
+    print("-- all chaos gates green (zero violations / zero leaks / "
+          "none lost / none double-finished / fault-free identical)")
+    rows.append(csv_row("faults.failover_recovery_s", rec))
+    rows.append(csv_row("faults.redispatched", fo["redispatched"]))
+    if not fast:
+        BASELINE_PATH.write_text(json.dumps(results, indent=2,
+                                            default=str) + "\n")
+        print(f"wrote {BASELINE_PATH.name}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

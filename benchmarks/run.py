@@ -16,21 +16,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override every benchmark's workload RNG seed "
+                         "(reproduce a chaos-bench failure from its log)")
     ap.add_argument("--list", action="store_true",
                     help="print the known benchmark names and exit")
     args = ap.parse_args()
 
-    from . import (ablation, assigned_archs, characterization, decode_priority, e2e,
-                   encode_overlap, estimator_accuracy, load_scaling,
+    from . import (ablation, assigned_archs, characterization, common,
+                   decode_priority, e2e,
+                   encode_overlap, estimator_accuracy, fault_tolerance,
+                   load_scaling,
                    memory_pressure, multi_replica, preemptions, prefix_cache,
                    priority_curves, real_executor, roofline,
                    scheduler_overhead, slo_scales, ttft_breakdown,
                    workload_mix, workloads_tcm)
+    common.SEED_OVERRIDE = args.seed
     benches = [
         ("scheduler_overhead", scheduler_overhead),
         ("encode_overlap", encode_overlap),
         ("real_executor", real_executor),
         ("prefix_cache", prefix_cache),
+        ("fault_tolerance", fault_tolerance),
         ("fig2_characterization", characterization),
         ("fig3_workload_mix", workload_mix),
         ("fig4_14_memory_pressure", memory_pressure),
@@ -64,6 +71,9 @@ def main() -> None:
     for name, mod in selected:
         t0 = time.time()
         print(f"\n===== {name} =====")
+        print(f"# rng seed: {common.resolve_seed()}"
+              + (" (--seed override)" if args.seed is not None
+                 else " (default)"))
         rows = mod.main(fast=args.fast) or []
         all_rows.extend(rows)
         print(f"# {name} done in {time.time()-t0:.1f}s")

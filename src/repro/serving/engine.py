@@ -40,13 +40,15 @@ bit-identical either way (benchmarks/scheduler_overhead.py enforces it).
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 
 from repro.cache import BlockAllocator, OutOfPages
 from repro.core.queues import QueueManager
 from repro.core.scheduler import SchedulerPolicy
 from repro.serving.encoder_cache import EncoderCache
-from repro.serving.request import Request, State, VehicleClass
+from repro.serving.request import (TERMINAL_STATES, Request, State,
+                                   VehicleClass)
 
 
 @dataclass
@@ -84,6 +86,20 @@ class EngineConfig:
     # seed's brute-force planning (full re-sort + per-token allocate):
     # the decision-equivalence oracle and host-overhead baseline
     legacy_scheduling: bool = False
+    # fault-tolerant lifecycle (ISSUE 6): bounded retry-with-backoff for
+    # transient encoder/executor faults. The backoff is simulated clock
+    # time (doubling per attempt); past the retry cap an encoder fault
+    # fails the request, an executor fault fails the batch.
+    max_encode_retries: int = 3
+    max_step_retries: int = 3
+    retry_backoff_s: float = 0.05
+    # graceful load shed: under *sustained* page pressure (admission
+    # blocked on pages for shed_after_iters consecutive iterations) shed
+    # waiting rocks first — trucks, then cars, never motorcycles — so
+    # sand keeps flowing (the paper's modality abstraction applied to
+    # overload). Off by default: fault-free runs stay bit-identical.
+    load_shed: bool = False
+    shed_after_iters: int = 40
 
 
 @dataclass
@@ -92,6 +108,11 @@ class Engine:
     executor: object
     classifier: object
     config: EngineConfig = field(default_factory=EngineConfig)
+    # fault-injection plan (serving/faults.py) or None. Every hook below
+    # is gated on ``faults is not None`` so the fault-free hot path pays
+    # a single pointer check; an installed-but-empty FaultPlan() changes
+    # nothing either (tests/test_faults.py gates both bit-exactly).
+    faults: object | None = None
 
     def __post_init__(self):
         if self.config.encode_budget <= 0:
@@ -113,7 +134,18 @@ class Engine:
         self.prefilling: dict[Request, None] = {}  # admitted, chunked prefill
         self.finished: list[Request] = []
         self.rejected: list[Request] = []          # admission control
+        self.aborted: list[Request] = []           # FAILED / CANCELLED
         self.iterations = 0
+        # hardened lifecycle (ISSUE 6): deadline min-heap (lazy deletion;
+        # empty when no request carries a finite deadline, so the sweep
+        # is O(1) on fault-free runs), encoder-cache pins held per rid,
+        # and the sustained-page-pressure counter behind load_shed
+        self._deadline_heap: list[tuple[float, int, Request]] = []
+        self._deadline_seq = 0
+        self._enc_pins: dict[str, str] = {}        # rid -> pinned mm_hash
+        self._pressure_streak = 0
+        self._admit_blocked = False
+        self.shed_count = 0
         # decoupled encode stage: its own per-class queue manager; ordering
         # reuses the policy's WaitingIndex on the fast path
         self.encode_queues = QueueManager()
@@ -211,13 +243,39 @@ class Engine:
                     # for a request that will never run
                     self.executor.release_slot(req)
                 continue
+            # hardened lifecycle: plan-assigned deadline (absolute = rel
+            # after arrival); caller-set deadlines are honored as-is
+            if self.faults is not None and req.deadline == float("inf"):
+                rel = self.faults.deadline_for(req)
+                if rel is not None:
+                    req.deadline = req.arrival + rel
+            if req.deadline != float("inf"):
+                self._deadline_seq += 1
+                heapq.heappush(self._deadline_heap,
+                               (req.deadline, self._deadline_seq, req))
+            # pin the encoder-cache entry this request depends on: an
+            # ingest hit must stay resident until the request is done
+            # with its embeddings; a miss reserves the hash the pending
+            # encode will insert. Released exactly once at terminal.
+            if self.encoder_cache is not None and req.mm_hash is not None \
+                    and req.mm_units > 0:
+                self.encoder_cache.pin(req.mm_hash)
+                self._enc_pins[req.rid] = req.mm_hash
             # multimodal requests encode before they can prefill; a cached
             # encoder output (same content hash) skips the stage entirely
             if req.mm_units > 0 and not self._encode_cached(req):
                 req.state = State.ENCODING
                 self.encode_queues.push(req, self.now)
+                if self.faults is not None and \
+                        self.faults.should_cancel(req, "encoding"):
+                    self._abort(req, State.CANCELLED, "client cancel "
+                                "(encoding)")
             else:
                 self.queues.push(req, self.now)
+                if self.faults is not None and \
+                        self.faults.should_cancel(req, "waiting"):
+                    self._abort(req, State.CANCELLED, "client cancel "
+                                "(waiting)")
         return i
 
     def _encode_cached(self, req: Request) -> bool:
@@ -230,6 +288,87 @@ class Engine:
         req.encode_cache_hit = True
         req.encoded_units = req.mm_units
         return True
+
+    # -- hardened lifecycle (ISSUE 6) ----------------------------------
+    def _unpin_encoder(self, req: Request) -> None:
+        """Release the request's encoder-cache pin (exactly once)."""
+        h = self._enc_pins.pop(req.rid, None)
+        if h is not None and self.encoder_cache is not None:
+            self.encoder_cache.unpin(h)
+
+    def _abort(self, req: Request, state: State, error: str) -> bool:
+        """Move ``req`` to a terminal FAILED/CANCELLED state, releasing
+        every held resource exactly once: queue/membership indices, KV
+        pages (incl. shared prefix-cache refs and COW claims — the
+        allocator's ref counts make ``free`` safe for shared chains),
+        encoder-cache pins, and executor-side slots/state. Idempotent:
+        a second abort of a terminal request is a no-op.
+
+        A cancelled/expired request whose prefill had completed still
+        holds *valid* prompt KV — publish the chain first (like
+        preemption does) so the work is re-monetizable; a FAILED request
+        publishes nothing (its KV is suspect by definition)."""
+        if req.state in TERMINAL_STATES:
+            return False
+        prev = req.state
+        if prev in (State.WAITING, State.PREEMPTED):
+            self.queues.remove(req)
+        elif prev is State.ENCODING:
+            self.encode_queues.remove(req)
+        elif prev is State.PREFILLING:
+            self.prefilling.pop(req, None)
+        elif prev is State.RUNNING:
+            self.running.pop(req, None)
+        if self._victim_view is not None:
+            self._victim_view.discard(req)
+        if state is State.CANCELLED and self.prefix_on and \
+                req.prefilled >= req.prompt_tokens and \
+                self.allocator.owned_pages(req.rid) > 0:
+            self.allocator.publish_prefix(req.rid, req.content_chunks())
+        self.allocator.free(req.rid)
+        req.state = state
+        req.error = error
+        req.aborted_at = self.now
+        if hasattr(self.executor, "release_slot"):
+            self.executor.release_slot(req)
+        self._unpin_encoder(req)
+        self.aborted.append(req)
+        return True
+
+    def cancel(self, req: Request, reason: str = "client cancel") -> bool:
+        """Public cancellation entry point (client disconnect): abort a
+        non-terminal request and release everything it holds."""
+        return self._abort(req, State.CANCELLED, reason)
+
+    def _expire_deadlines(self) -> None:
+        """Abort every non-terminal request whose hard deadline passed.
+        Lazy-deleting min-heap: terminal entries pop through silently, so
+        the sweep costs O(expired log n) — zero when no deadlines exist."""
+        heap = self._deadline_heap
+        while heap and heap[0][0] <= self.now:
+            _dl, _seq, req = heapq.heappop(heap)
+            if req.state not in TERMINAL_STATES:
+                self._abort(req, State.CANCELLED,
+                            f"deadline exceeded ({req.deadline:.3f}s)")
+
+    def _shed_for_pressure(self) -> None:
+        """Load shed under sustained page pressure: admission has been
+        blocked on pages for ``shed_after_iters`` consecutive iterations,
+        so drop the biggest waiting rock — trucks first, then cars,
+        *never* motorcycles — and keep the sand flowing (modality-aware
+        degradation). Shedding waiting (not running) requests wastes no
+        completed work; the streak half-resets so shedding stays gradual
+        under continued pressure."""
+        for vclass in (VehicleClass.TRUCK, VehicleClass.CAR):
+            q = self.queues.queues[vclass]
+            if not len(q):
+                continue
+            victim = max(q, key=lambda r: (r.est_kv_tokens, r.rid))
+            self._abort(victim, State.FAILED,
+                        "load shed: sustained page pressure")
+            self.shed_count += 1
+            self._pressure_streak = self.config.shed_after_iters // 2
+            return
 
     # ------------------------------------------------------------------
     def _victims(self):
@@ -293,6 +432,7 @@ class Engine:
         while not self.allocator.can_allocate(tokens, rid=req.rid,
                                               match=match):
             if tries >= self.config.max_preemptions_per_iter:
+                self._admit_blocked = True
                 return False
             if legacy:
                 victim = self.policy.pick_victim(
@@ -303,6 +443,7 @@ class Engine:
                     bar = self.policy.rank(req, self.now)
                 victim = self._victims().pick(bar=bar, exclude=req)
             if victim is None or victim is req:
+                self._admit_blocked = True
                 return False
             self._preempt(victim)
             tries += 1
@@ -339,6 +480,12 @@ class Engine:
         victim.prefilled = 0
         victim.state = State.PREEMPTED
         self.queues.push(victim, self.now)
+        if self.faults is not None and \
+                self.faults.should_cancel(victim, "preempted"):
+            # client disconnected in the preemption window: the victim's
+            # pages are already freed, so the abort only dequeues it
+            self._abort(victim, State.CANCELLED,
+                        "client cancel (preempted)")
 
     def _reprice(self, req: Request) -> None:
         """The admission-time claim diverged from the ingest advisory —
@@ -358,6 +505,10 @@ class Engine:
     def _admit(self, req: Request) -> bool:
         """Waiting -> prefilling transition (shared by both plan paths).
         Caller checks the max_num_seqs cap first."""
+        if req.state in TERMINAL_STATES:
+            # cancelled/failed while a stale plan snapshot still listed
+            # it (e.g. a mid-plan preemption cancel) — never resurrect
+            return False
         advisory = req.cached_prefix_tokens
         if not self._try_admit(req):
             return False
@@ -519,12 +670,28 @@ class Engine:
         """Grow a decoding request's KV to ``total_tokens``. On pressure,
         preempt a strictly-eligible victim; with no victim (or if the
         retry still fails), preempt the request itself recompute-style —
-        the seed crashed on an uncaught OutOfPages here."""
+        the seed crashed on an uncaught OutOfPages here.
+
+        Livelock guard (ISSUE 6 satellite): a context that can never fit
+        *total* KV capacity would be preempted, re-admitted, re-prefilled
+        and re-preempted at the same point forever. Detect "cannot fit
+        even from an empty allocator" up front and fail the request with
+        a clear CapacityExceeded error instead — no victim can help, so
+        none is punished either."""
         try:
             self.allocator.allocate(req.rid, total_tokens)
             return True
         except OutOfPages:
             pass
+        if self.allocator.pages_for_tokens(total_tokens) > \
+                self.allocator.num_pages:
+            self._abort(
+                req, State.FAILED,
+                f"CapacityExceeded: context of {total_tokens} tokens "
+                f"needs {self.allocator.pages_for_tokens(total_tokens)} "
+                f"pages but the allocator only has "
+                f"{self.allocator.num_pages}")
+            return False
         if self.config.legacy_scheduling:
             victim = self.policy.pick_victim(
                 [r for r in list(self.running) + list(self.prefilling)
@@ -543,6 +710,8 @@ class Engine:
 
     def _step_core(self, pending: list[Request], start: int) -> int:
         start = self._ingest(pending, start)
+        if self._deadline_heap:
+            self._expire_deadlines()
         if not (self.running or self.prefilling or len(self.queues)
                 or len(self.encode_queues)):
             if start < len(pending):  # idle: jump to next arrival
@@ -551,7 +720,15 @@ class Engine:
             else:
                 return start
 
+        self._admit_blocked = False
         prefill_work, decode_batch, encode_work = self._plan()
+        if self.config.load_shed:
+            if self._admit_blocked:
+                self._pressure_streak += 1
+                if self._pressure_streak >= self.config.shed_after_iters:
+                    self._shed_for_pressure()
+            else:
+                self._pressure_streak = 0
         if not (prefill_work or decode_batch or encode_work) \
                 and (len(self.queues) or len(self.encode_queues)):
             # everything is waiting on async preprocess: jump ahead
@@ -559,6 +736,29 @@ class Engine:
                       + self.encode_queues.peek_all())
             self.now = max(self.now, nxt)
             prefill_work, decode_batch, encode_work = self._plan()
+        if self.faults is not None:
+            # transient executor-step faults: retry with doubling backoff
+            # (simulated clock time); past the cap the fault is permanent
+            # for this batch — fail every request the broken step touched
+            attempt = 0
+            while self.faults.step_fault(self.iterations, attempt):
+                if attempt >= self.config.max_step_retries:
+                    self.iterations += 1
+                    for req, _chunk in prefill_work:
+                        req.step_faults += 1
+                        self._abort(req, State.FAILED, "executor fault "
+                                    "(step retries exhausted)")
+                    for req in decode_batch:
+                        req.step_faults += 1
+                        self._abort(req, State.FAILED, "executor fault "
+                                    "(step retries exhausted)")
+                    for req, _units in encode_work:
+                        req.step_faults += 1
+                        self._abort(req, State.FAILED, "executor fault "
+                                    "(step retries exhausted)")
+                    return start
+                self.now += self.config.retry_backoff_s * (2 ** attempt)
+                attempt += 1
         plan_now = self.now
         duration = self.executor.run_iteration(prefill_work, decode_batch,
                                                encode_work)
@@ -567,6 +767,20 @@ class Engine:
 
         cache = self.encoder_cache
         for req, units in encode_work:
+            if self.faults is not None and self.faults.encoder_fault(req):
+                # this chunk's encode failed (corrupt frame, encoder OOM):
+                # no unit credit; requeue with doubling backoff, and fail
+                # the request terminally once the retry budget is spent
+                req.encode_faults += 1
+                if req.encode_faults > self.config.max_encode_retries:
+                    self._abort(req, State.FAILED,
+                                "encoder fault (retries exhausted)")
+                else:
+                    self.encode_queues.remove(req)
+                    req.ready_at = self.now + self.config.retry_backoff_s \
+                        * (2 ** (req.encode_faults - 1))
+                    self.encode_queues.push(req, self.now)
+                continue
             if req.encode_start_time is None:
                 req.encode_start_time = plan_now
             req.encoded_units += units
@@ -580,12 +794,23 @@ class Engine:
                     cache.insert(req.mm_hash, req.mm_units)
                 req.state = State.WAITING
                 self.queues.push(req, self.now)
+                if self.faults is not None and \
+                        self.faults.should_cancel(req, "waiting"):
+                    self._abort(req, State.CANCELLED, "client cancel "
+                                "(waiting)")
         page = self.config.page_size
         legacy = self.config.legacy_scheduling
         alloc = self.allocator
         for req, chunk in prefill_work:
             if req not in self.prefilling:
                 continue  # preempted later in the same planning pass
+            if self.faults is not None and \
+                    self.faults.should_cancel(req, "prefilling"):
+                # disconnect mid-prefill (possibly holding a COW claim on
+                # shared prefix pages — _abort's ref-aware free handles it)
+                self._abort(req, State.CANCELLED,
+                            "client cancel (prefilling)")
+                continue
             req.prefilled += chunk
             if self.prefix_on and req.prefilled < req.prompt_tokens:
                 # progressive in-flight publication: pages this chunk
@@ -629,6 +854,11 @@ class Engine:
         for req in decode_batch:
             if req not in self.running:
                 continue  # preempted mid-plan (defensive)
+            if self.faults is not None and \
+                    self.faults.should_cancel(req, "running"):
+                self._abort(req, State.CANCELLED,
+                            "client cancel (running)")
+                continue
             req.decoded += 1
             total = req.prompt_tokens + req.decoded
             # KV grows only when the context outruns the pages already
@@ -650,6 +880,7 @@ class Engine:
                 self._victim_view.discard(req)
             if hasattr(self.executor, "release_slot"):
                 self.executor.release_slot(req)
+            self._unpin_encoder(req)
             self.finished.append(req)
         return start
 
@@ -662,13 +893,21 @@ class Engine:
         i = self._step_core(pending, 0)
         return pending[i:] if i else pending
 
+    @property
+    def idle(self) -> bool:
+        """No in-flight work anywhere (the router's stepped co-simulation
+        uses this to detect quiescent replicas)."""
+        return not (self.running or self.prefilling or len(self.queues)
+                    or len(self.encode_queues))
+
     # ------------------------------------------------------------------
     def run(self, requests: list[Request], max_iters: int = 2_000_000):
         pending = sorted(requests, key=lambda r: r.arrival)
         n = len(pending)
         start = 0
         it = 0
-        while len(self.finished) + len(self.rejected) < n and it < max_iters:
+        while len(self.finished) + len(self.rejected) + \
+                len(self.aborted) < n and it < max_iters:
             start = self._step_core(pending, start)
             it += 1
         return self.finished

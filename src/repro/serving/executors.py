@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.core.profiler import ProfileRecord
 
-from .request import Modality, Request, State
+from .request import TERMINAL_STATES, Modality, Request
 
 
 class SlotCapacityError(RuntimeError):
@@ -482,10 +482,10 @@ class ModelExecutor:
         """Drop a request's executor-side state (engine calls this on
         preemption and on finish)."""
         self._ctx.pop(req.rid, None)
-        if req.state in (State.FINISHED, State.REJECTED):
-            # rejected requests carry the *largest* prompts (admission
-            # control bounces what exceeds total KV), so their profile
-            # memo and token arrays must not outlive them either
+        if req.state in TERMINAL_STATES:
+            # terminal (finished/rejected/failed/cancelled) requests never
+            # run again: their profile memo and token arrays must not
+            # outlive them (rejected ones carry the *largest* prompts)
             self._prompt_cache.pop(req.rid, None)
             self._isolated_ttft.pop(req.rid, None)
             if req.rid in self.emitted:
@@ -505,6 +505,7 @@ class ModelExecutor:
     # -- profiler interface -------------------------------------------------
     def isolated_run(self, req: Request) -> ProfileRecord:
         n = min(req.prompt_tokens, self.max_len - 8)
+        meas = n
         t0 = time.perf_counter()
         if self.legacy:
             slot = self.acquire_slot(req)
@@ -516,15 +517,29 @@ class ModelExecutor:
             self.caches[slot] = cache
         else:
             rid = f"__profile__{req.rid}"
-            self.allocator.allocate(rid, n)
-            try:
-                toks = self._prompt_tokens(req)[:n]
-                out = self._paged_prefill_call(
-                    [(rid, toks, 0, 0, n)])
-                out.block_until_ready()
-            finally:
-                self.allocator.free(rid)
+            # admission-time profiling borrows pages from the live pool; a
+            # near-full pool must clamp the measurement, not crash serving.
+            # Prefill is ~linear in tokens at these sizes (the residual
+            # pricing in isolated_e2e already relies on that), so measure
+            # the longest prefix that fits and extrapolate; a completely
+            # full pool falls back to the last measured per-token rate.
+            meas = min(n, self.allocator.available_pages
+                       * self.allocator.page_size)
+            if meas > 0:
+                self.allocator.allocate(rid, meas)
+                try:
+                    toks = self._prompt_tokens(req)[:meas]
+                    out = self._paged_prefill_call(
+                        [(rid, toks, 0, 0, meas)])
+                    out.block_until_ready()
+                finally:
+                    self.allocator.free(rid)
         prefill = time.perf_counter() - t0
+        if meas < n:
+            prefill = (prefill * n / meas if meas > 0
+                       else getattr(self, "_profile_rate", 1e-4) * n)
+        if n > 0 and meas > 0:
+            self._profile_rate = prefill / n
         self.release_slot(req)
         self._prompt_cache.pop(req.rid, None)
         return ProfileRecord(

@@ -3,9 +3,31 @@ from __future__ import annotations
 
 import numpy as np
 
-from .request import Request
+from .request import Request, State
 
 GROUPS = ("motorcycle", "car", "truck", "overall")
+
+
+def lifecycle_counts(reqs: list[Request]) -> dict:
+    """How every request ended (ISSUE 6): the chaos benchmark asserts
+    these partition the workload — each request reaches exactly one
+    terminal state, none is lost in flight, none finishes twice."""
+    by_state: dict[str, int] = {}
+    for r in reqs:
+        by_state[r.state.value] = by_state.get(r.state.value, 0) + 1
+    return {
+        "finished": by_state.get(State.FINISHED.value, 0),
+        "rejected": by_state.get(State.REJECTED.value, 0),
+        "failed": by_state.get(State.FAILED.value, 0),
+        "cancelled": by_state.get(State.CANCELLED.value, 0),
+        "in_flight": sum(n for s, n in by_state.items()
+                         if s not in ("finished", "rejected", "failed",
+                                      "cancelled")),
+        "shed": sum(1 for r in reqs
+                    if r.error is not None and r.error.startswith(
+                        "load shed")),
+        "redispatched": sum(1 for r in reqs if r.redispatches > 0),
+    }
 
 
 def _group(reqs: list[Request], g: str) -> list[Request]:

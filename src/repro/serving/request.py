@@ -31,6 +31,15 @@ class State(str, enum.Enum):
     PREEMPTED = "preempted"
     FINISHED = "finished"
     REJECTED = "rejected"       # admission control: exceeds total KV capacity
+    FAILED = "failed"           # terminal: fault/capacity/shed (see .error)
+    CANCELLED = "cancelled"     # terminal: client cancel / deadline expiry
+
+
+#: states from which a request never leaves; every held resource (KV
+#: pages, prefix-cache refs, encoder-cache pins, queue membership,
+#: executor slots) must have been released exactly once on entry
+TERMINAL_STATES = frozenset(
+    {State.FINISHED, State.REJECTED, State.FAILED, State.CANCELLED})
 
 
 @dataclass(eq=False)  # identity semantics: hashable, O(1) membership in the
@@ -84,7 +93,49 @@ class Request:        # engine's running/prefilling sets (rids are unique)
     slo_from_engine: bool = False  # engine-assigned (scale x isolated) vs
     #                                caller-provided: only the former may be
     #                                re-derived when cache state shifts
+    # ---- fault-tolerant lifecycle (ISSUE 6) ----
+    deadline: float = float("inf")  # absolute hard deadline (abort past it)
+    error: str | None = None        # why the request FAILED / was CANCELLED
+    aborted_at: float | None = None  # terminal-abort timestamp (finish_time
+    #                                  stays None: an aborted request never
+    #                                  produced its full output)
+    encode_faults: int = 0          # injected encoder-chunk failures seen
+    step_faults: int = 0            # executor-step retries charged to it
+    redispatches: int = 0           # replica-failover re-dispatch count
     _chunks_cache: tuple | None = None  # memoized content_chunks()
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    def reset_for_redispatch(self) -> None:
+        """Restart the lifecycle on a surviving replica after its original
+        replica died: all progress (encode, prefill, decode, cache claims)
+        lived in the dead replica's memory and is gone. Arrival (and any
+        caller-provided SLO/deadline) is preserved — the client has been
+        waiting since then — while engine-assigned SLOs reset so the new
+        replica re-derives them from its own cache state."""
+        self.state = State.WAITING
+        self.prefilled = 0
+        self.decoded = 0
+        self.encoded_units = 0
+        self.encode_cache_hit = False
+        self.cached_prefix_tokens = 0
+        self.enqueue_time = 0.0
+        self.ready_at = 0.0
+        self.encode_start_time = None
+        self.encode_finish_time = None
+        self.admit_time = None
+        self.first_token_time = None
+        self.finish_time = None
+        self.aborted_at = None
+        self.error = None
+        self.preempted_at = None
+        self.encode_faults = 0
+        if self.slo_from_engine:
+            self.slo = float("inf")
+            self.slo_from_engine = False
+        self.redispatches += 1
 
     def content_chunks(self) -> tuple:
         """The prompt as ``(content_id, tokens)`` segments in canonical

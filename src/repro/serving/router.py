@@ -10,6 +10,18 @@ The router assigns requests at arrival:
     cars) are pinned to a dedicated subset of replicas so motorcycles get
     contention-free replicas — the scheduling-level analogue of ModServe's
     stage disaggregation, built on TCM's own classifier.
+  * prefix-aware     — place where the replica's KV prefix cache already
+    holds the longest match for the request's content (tie: least load),
+    so duplicate rocks land where their pages are (ISSUE 6).
+
+Failover (ISSUE 6 tentpole): ``run_stepped`` co-simulates every replica
+on one timeline, applies whole-replica crashes from the fault plan's
+``replica_kills`` schedule, and re-dispatches each dead replica's
+in-flight (and still-pending) requests to surviving replicas —
+prefix-cache-aware, so re-dispatched work re-claims any pages a survivor
+already holds for the same content. A crash loses the replica's memory
+(KV, encoder cache, progress); requests restart from scratch via
+``Request.reset_for_redispatch`` — none lost, none double-finished.
 """
 from __future__ import annotations
 
@@ -28,12 +40,24 @@ class Router:
     policy: str = "tcm"        # per-replica scheduling policy
     routing: str = "least-loaded"
     truck_replicas: int = 1    # for truck-isolation: replicas reserved
+    # fault plan shared by every replica (serving/faults.py) or None.
+    # Replica kills only take effect under ``run_stepped``; per-request
+    # faults key off rid/content so sharing one plan stays deterministic.
+    faults: object | None = None
 
     def __post_init__(self):
         self.engines = [Engine(make_policy(self.policy), ex, self.classifier,
-                               self.engine_cfg) for ex in self.executors]
+                               self.engine_cfg, faults=self.faults)
+                        for ex in self.executors]
         self._rr = 0
         self._load = [0.0] * len(self.engines)
+        # health tracking + failover accounting (ISSUE 6)
+        self.alive = [True] * len(self.engines)
+        self.killed_at: list[float | None] = [None] * len(self.engines)
+        self._assigned: list[list[Request]] = [[] for _ in self.engines]
+        self.kill_events: list[dict] = []
+        self.redispatched = 0
+        self.lost: list[Request] = []
 
     # ------------------------------------------------------------------
     def _route(self, req: Request) -> int:
@@ -63,7 +87,21 @@ class Router:
             i = min(pool, key=lambda j: self._load[j])
             self._load[i] += est_prefill
             return i
+        if self.routing == "prefix-aware":
+            i = self._prefix_target(req)
+            self._load[i] += est_prefill
+            return i
         raise ValueError(self.routing)
+
+    def _prefix_target(self, req: Request) -> int:
+        """Alive replica whose KV prefix cache matches the most tokens of
+        this request's content (ties break toward the least-loaded)."""
+        pool = [j for j in range(len(self.engines)) if self.alive[j]]
+        limit = max(req.prompt_tokens - 1, 0)
+        return max(pool, key=lambda j: (
+            self.engines[j].allocator.match_prefix(
+                req.content_chunks(), limit).tokens,
+            -self._load[j]))
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request]) -> list[Request]:
@@ -74,3 +112,67 @@ class Router:
         for eng, bucket in zip(self.engines, buckets):
             done.extend(eng.run(bucket))
         return done
+
+    # -- failover co-simulation (ISSUE 6) ------------------------------
+    def _kill(self, i: int, remaining: list[list[Request]]) -> None:
+        """Replica crash: its memory (KV, encoder cache, all request
+        progress) is gone. Every non-terminal request assigned to it —
+        in-flight or still pending — restarts from scratch on the best
+        surviving replica (prefix-aware: a survivor may already hold
+        pages for the same content)."""
+        eng = self.engines[i]
+        self.alive[i] = False
+        self.killed_at[i] = eng.now
+        inflight = [r for r in self._assigned[i] if not r.is_terminal]
+        self._assigned[i] = [r for r in self._assigned[i] if r.is_terminal]
+        remaining[i] = []
+        moved = 0
+        for req in inflight:
+            req.reset_for_redispatch()
+            if not any(self.alive):
+                self.lost.append(req)
+                continue
+            j = self._prefix_target(req)
+            self._load[j] += req.est_prefill
+            remaining[j].append(req)
+            self._assigned[j].append(req)
+            moved += 1
+        for lst in remaining:
+            lst.sort(key=lambda r: r.arrival)
+        self.redispatched += moved
+        self.kill_events.append(
+            {"replica": i, "time": eng.now, "redispatched": moved})
+
+    def run_stepped(self, requests: list[Request],
+                    max_steps: int = 2_000_000) -> list[Request]:
+        """Co-simulate all replicas step-by-step on one timeline: each
+        outer step advances the alive replica whose clock lags furthest
+        behind, and replica kills scheduled in the fault plan fire when
+        the victim's clock reaches the kill time (an idle victim whose
+        next arrival lies past the kill time dies in place — its clock
+        would otherwise jump the crash)."""
+        n = len(self.engines)
+        remaining: list[list[Request]] = [[] for _ in range(n)]
+        for req in sorted(requests, key=lambda r: r.arrival):
+            i = self._route(req)
+            remaining[i].append(req)
+            self._assigned[i].append(req)
+        for _ in range(max_steps):
+            if self.faults is not None:
+                for i, eng in enumerate(self.engines):
+                    if not self.alive[i]:
+                        continue
+                    kt = self.faults.kill_time(i)
+                    if kt is None:
+                        continue
+                    nxt = remaining[i][0].arrival if remaining[i] else None
+                    if eng.now >= kt or (eng.idle and
+                                         (nxt is None or nxt > kt)):
+                        self._kill(i, remaining)
+            live = [i for i in range(n) if self.alive[i]
+                    and (not self.engines[i].idle or remaining[i])]
+            if not live:
+                break
+            i = min(live, key=lambda j: self.engines[j].now)
+            remaining[i] = self.engines[i].step(remaining[i])
+        return [r for eng in self.engines for r in eng.finished]

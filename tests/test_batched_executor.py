@@ -451,3 +451,26 @@ def test_token_rng_is_process_stable():
         1, ex.cfg.vocab_size, size=12, dtype=np.int64)
     np.testing.assert_array_equal(toks, expect)
     ex._prompt_cache.pop(req.rid, None)
+
+
+def test_isolated_run_survives_full_page_pool():
+    """Admission-time profiling borrows pages from the live pool; a busy
+    pool must clamp the measurement (and a *full* pool must fall back to
+    the last measured per-token rate) instead of raising OutOfPages."""
+    from repro.configs import get_reduced
+    ex = ModelExecutor(get_reduced("chatglm3-6b"), max_slots=2, max_len=64)
+    page = ex.allocator.page_size
+    # leave a single page free: the 60-token profile (4 pages) must clamp
+    ex.allocator.allocate("hog", (ex.allocator.num_pages - 1) * page)
+    before = ex.allocator.used_pages
+    rec = ex.isolated_run(_mk_req(60, 2))
+    assert rec.prefill_time > 0
+    assert ex.allocator.used_pages == before       # profile pages returned
+    # fully occupied: no measurement possible, extrapolate from last rate
+    ex.allocator.allocate("hog2", page)
+    assert ex.allocator.available_pages == 0
+    rec2 = ex.isolated_run(_mk_req(60, 2))
+    assert rec2.prefill_time > 0
+    assert ex.allocator.used_pages == ex.allocator.num_pages
+    ex.allocator.free("hog")
+    ex.allocator.free("hog2")

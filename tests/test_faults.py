@@ -1,0 +1,418 @@
+"""Fault-injected serving tier (ISSUE 6): deterministic FaultPlan,
+hardened request lifecycle (terminal FAILED/CANCELLED with exactly-once
+resource release), CapacityExceeded livelock guard, encoder-cache
+pinning, modality-aware load shedding, and router failover.
+
+The central property: *any* fault schedule — cancels at random stages
+(including mid-COW-claim and post-preemption), deadlines, encoder and
+executor faults — leaves the allocator invariant-clean with zero leaked
+pages and zero leaked encoder-cache pins, and every request in exactly
+one terminal state. And an installed-but-empty faults layer changes
+nothing at all."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import sim_stack_cached
+from repro.core.scheduler import make_policy
+from repro.serving.encoder_cache import EncoderCache
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor, make_cost_model
+from repro.serving.faults import CANCEL_STAGES, FaultPlan, FaultRates
+from repro.serving.metrics import lifecycle_counts
+from repro.serving.request import (TERMINAL_STATES, Modality, Request,
+                                   State, VehicleClass)
+from repro.serving.router import Router
+from repro.serving.workload import WorkloadConfig, generate
+
+POLICY = "tcm"
+
+
+def _wl(n=40, seed=0, **kw):
+    kw.setdefault("duplicate_prob", 0.3)
+    kw.setdefault("shared_prefix_prob", 0.3)
+    kw.setdefault("rate", 3.0)
+    return generate(WorkloadConfig(mix="MH", num_requests=n,
+                                   seed=seed, **kw))
+
+
+def _engine(plan=None, **cfg_kw):
+    _ex, classifier, _cfg, _prof, _est = sim_stack_cached()
+    cfg_kw.setdefault("kv_pages", 2048)
+    cfg_kw.setdefault("token_budget", 512)
+    return Engine(make_policy(POLICY), SimExecutor(make_cost_model(
+        "llava-7b")), classifier, EngineConfig(**cfg_kw), faults=plan)
+
+
+def _assert_clean(eng, reqs):
+    """Exactly-once release: invariants green, zero leaked pages/pins,
+    every request terminal (the partition covers the workload)."""
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0
+    if eng.encoder_cache is not None:
+        stats = eng.encoder_cache.stats()
+        assert stats["pin_refs"] == 0
+        assert stats["pinned"] == 0
+    assert eng._enc_pins == {}
+    counts = lifecycle_counts(reqs)
+    assert counts["in_flight"] == 0
+    assert (counts["finished"] + counts["rejected"] + counts["failed"]
+            + counts["cancelled"]) == len(reqs)
+    done = {r.rid for r in eng.finished}
+    assert len(done) == len(eng.finished)          # none double-finished
+    assert done.isdisjoint(r.rid for r in eng.aborted)
+    assert done.isdisjoint(r.rid for r in eng.rejected)
+
+
+# ---------------- FaultPlan determinism -------------------------------------
+
+
+def test_fault_plan_replays_identically():
+    reqs = _wl(30, seed=3)
+    rates = FaultRates(cancel_prob=0.5, deadline_prob=0.5,
+                       encoder_fault_prob=0.5, step_fault_prob=0.2)
+
+    def trace(plan):
+        out = []
+        for r in reqs:
+            for stage in CANCEL_STAGES:
+                out.append(plan.should_cancel(r, stage))
+            out.append(plan.deadline_for(r))
+            out.append(plan.encoder_fault(r))
+        for it in range(50):
+            out.append(plan.step_fault(it, 0))
+        return out
+
+    a = trace(FaultPlan(seed=11, rates=rates))
+    b = trace(FaultPlan(seed=11, rates=rates))
+    assert a == b
+    assert trace(FaultPlan(seed=12, rates=rates)) != a
+
+
+def test_fault_plan_decisions_independent_of_order():
+    """Per-request decisions hash content, not arrival order: consulting
+    requests in a different order yields the same per-rid outcomes."""
+    reqs = _wl(20, seed=4)
+    rates = FaultRates(cancel_prob=0.5, deadline_prob=0.5)
+    p1, p2 = (FaultPlan(seed=5, rates=rates) for _ in range(2))
+    d1 = {r.rid: p1.deadline_for(r) for r in reqs}
+    d2 = {r.rid: p2.deadline_for(r) for r in reversed(reqs)}
+    assert d1 == d2
+    c1 = {r.rid: p1._cancel_point(r.rid) for r in reqs}
+    c2 = {r.rid: p2._cancel_point(r.rid) for r in reversed(reqs)}
+    assert c1 == c2
+
+
+def test_explicit_cancel_fires_once_at_nth_observation():
+    plan = FaultPlan(cancels={"a": ("running", 2)})
+    req = Request(rid="a", modality=Modality.TEXT, arrival=0.0,
+                  text_tokens=10, prompt_tokens=10)
+    assert not plan.should_cancel(req, "waiting")
+    assert not plan.should_cancel(req, "running")    # 1st sighting
+    assert plan.should_cancel(req, "running")        # 2nd: fire
+    assert not plan.should_cancel(req, "running")    # never again
+
+
+# ---------------- lifecycle: cancel / deadline / retry ----------------------
+
+
+def test_cancel_running_request_releases_everything():
+    reqs = _wl(12, seed=1)
+    victim_rid = reqs[0].rid
+    plan = FaultPlan(cancels={victim_rid: ("running", 1)})
+    eng = _engine(plan)
+    eng.run(reqs)
+    victim = next(r for r in reqs if r.rid == victim_rid)
+    assert victim.state is State.CANCELLED
+    assert victim.error == "client cancel (running)"
+    assert victim.finish_time is None and victim.aborted_at is not None
+    _assert_clean(eng, reqs)
+
+
+def test_deadline_expiry_aborts_exactly_once():
+    reqs = _wl(12, seed=2)
+    # impossible deadline for one request; generous for another
+    plan = FaultPlan(deadlines={reqs[3].rid: 1e-6, reqs[4].rid: 1e6})
+    eng = _engine(plan)
+    eng.run(reqs)
+    expired = next(r for r in reqs if r.rid == reqs[3].rid)
+    assert expired.state is State.CANCELLED
+    assert "deadline" in expired.error
+    assert reqs[4].state is State.FINISHED
+    _assert_clean(eng, reqs)
+
+
+def test_transient_encoder_fault_heals_and_finishes():
+    reqs = _wl(12, seed=5)
+    mm = next(r for r in reqs if r.mm_units > 0)
+    plan = FaultPlan(encoder_faults={mm.rid: 2})   # heals on 3rd attempt
+    eng = _engine(plan)
+    eng.run(reqs)
+    assert mm.state is State.FINISHED
+    assert mm.encode_faults == 2
+    _assert_clean(eng, reqs)
+
+
+def test_permanent_encoder_fault_fails_terminally():
+    reqs = _wl(12, seed=5)
+    mm = next(r for r in reqs if r.mm_units > 0)
+    plan = FaultPlan(encoder_faults={mm.rid: 10 ** 6})
+    eng = _engine(plan)
+    eng.run(reqs)
+    assert mm.state is State.FAILED
+    assert "encoder fault" in mm.error
+    assert mm.encode_faults == eng.config.max_encode_retries + 1
+    _assert_clean(eng, reqs)
+
+
+def test_transient_step_fault_retries_and_completes():
+    reqs = _wl(10, seed=6)
+    plan = FaultPlan(step_faults={2: 1, 5: 2})   # heal within the cap
+    eng = _engine(plan)
+    eng.run(reqs)
+    assert all(r.state is State.FINISHED for r in reqs)
+    assert plan.injected["step"] == 3
+    _assert_clean(eng, reqs)
+
+
+def test_permanent_step_fault_fails_the_batch():
+    reqs = _wl(10, seed=6)
+    plan = FaultPlan(step_faults={3: 10 ** 6})
+    eng = _engine(plan)
+    eng.run(reqs)
+    assert any(r.state is State.FAILED and "executor fault" in r.error
+               for r in reqs)
+    _assert_clean(eng, reqs)
+
+
+# ---------------- CapacityExceeded livelock guard (satellite) ---------------
+
+
+def test_grow_kv_capacity_exceeded_fails_instead_of_livelock():
+    """A context that outgrows *total* KV capacity mid-decode (client
+    streams longer than declared) must fail with CapacityExceeded — the
+    seed's recompute-style self-preemption re-admitted and re-preempted
+    it at the same point forever."""
+    eng = _engine(None, kv_pages=32)   # 512 tokens total
+    req = Request(rid="big", modality=Modality.TEXT, arrival=0.0,
+                  text_tokens=200, prompt_tokens=200, output_tokens=8)
+    pending = [req]
+    for _ in range(20):                # admit + start decoding
+        pending = eng.step(pending)
+        if req.state is State.RUNNING:
+            break
+    assert req.state is State.RUNNING
+    req.output_tokens = 10_000         # declared 8, streams past capacity
+    for _ in range(5_000):
+        eng.step(pending)
+        if req.state in TERMINAL_STATES:
+            break
+    assert req.state is State.FAILED
+    assert "CapacityExceeded" in req.error
+    assert req.preemptions <= 2        # no preemption churn
+    _assert_clean(eng, [req])
+
+
+def test_grow_kv_feasible_growth_never_fails():
+    """The guard only fires on impossible contexts: growth that still
+    fits total capacity completes (however long the stream ran over its
+    declaration), never FAILED."""
+    eng = _engine(None, kv_pages=64)   # 1024 tokens total
+    req = Request(rid="ok", modality=Modality.TEXT, arrival=0.0,
+                  text_tokens=200, prompt_tokens=200, output_tokens=8)
+    pending = [req]
+    for _ in range(20):
+        pending = eng.step(pending)
+        if req.state is State.RUNNING:
+            break
+    assert req.state is State.RUNNING
+    req.output_tokens = 700            # 900 total: fits the 1024 pool
+    for _ in range(5_000):
+        eng.step(pending)
+        if req.state in TERMINAL_STATES:
+            break
+    assert req.state is State.FINISHED
+    assert req.decoded == 700
+    _assert_clean(eng, [req])
+
+
+# ---------------- encoder-cache pinning (satellite) -------------------------
+
+
+def test_encoder_cache_pin_survives_eviction():
+    c = EncoderCache(capacity=2)
+    c.insert("a", 10)
+    c.insert("b", 10)
+    c.pin("a")
+    c.insert("c", 10)                  # over capacity: must evict b, not a
+    assert "a" in c and "b" not in c and "c" in c
+    assert c.stats()["pinned"] == 1 and c.stats()["pin_refs"] == 1
+    c.pin("a")
+    assert c.stats()["pin_refs"] == 2
+    c.unpin("a")
+    c.unpin("a")
+    assert c.stats()["pinned"] == 0 and c.stats()["pin_refs"] == 0
+    c.insert("d", 10)                  # a unpinned: evictable again
+    assert "a" not in c
+
+
+def test_engine_pins_encoder_entry_while_encoding():
+    """A request mid-encode reserves its hash; a duplicate's entry stays
+    resident under LRU churn; pins release at terminal."""
+    reqs = _wl(20, seed=7, duplicate_prob=0.6)
+    eng = _engine(None, encoder_cache_entries=1)   # maximal churn
+    pending = list(reqs)
+    saw_pin = False
+    for _ in range(100_000):
+        pending = eng.step(pending)
+        if eng.encoder_cache.stats()["pin_refs"] > 0:
+            saw_pin = True
+        if len(eng.finished) + len(eng.rejected) + len(eng.aborted) \
+                == len(reqs):
+            break
+    assert saw_pin
+    _assert_clean(eng, reqs)
+
+
+# ---------------- load shedding (satellite of the tentpole) -----------------
+
+
+def test_load_shed_drops_rocks_never_motorcycles():
+    reqs = _wl(60, seed=8, rate=50.0)   # burst arrival: sustained pressure
+    eng = _engine(None, kv_pages=700, load_shed=True, shed_after_iters=5,
+                  max_num_seqs=128)
+    eng.run(reqs)
+    shed = [r for r in reqs if r.error is not None
+            and r.error.startswith("load shed")]
+    assert eng.shed_count == len(shed) > 0
+    assert all(r.vclass in (VehicleClass.TRUCK, VehicleClass.CAR)
+               for r in shed)
+    _assert_clean(eng, reqs)
+
+
+# ---------------- fault-free parity -----------------------------------------
+
+
+def test_empty_fault_plan_is_bit_exact_noop():
+    def run(plan):
+        eng = _engine(plan)
+        reqs = _wl(40, seed=9)
+        eng.run(reqs)
+        return {r.rid: (r.state.value, r.finish_time, r.first_token_time,
+                        r.decoded, r.preemptions, r.cached_prefix_tokens)
+                for r in reqs}
+    assert run(None) == run(FaultPlan())
+
+
+# ---------------- the chaos property ----------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       cancel=st.floats(0.0, 0.5), deadline=st.floats(0.0, 0.3),
+       encoder=st.floats(0.0, 0.5), step=st.floats(0.0, 0.05),
+       kv_pages=st.sampled_from([512, 1024, 2048]),
+       shed=st.booleans())
+def test_any_fault_schedule_conserves_resources(seed, cancel, deadline,
+                                                encoder, step, kv_pages,
+                                                shed):
+    """Whatever the sampled schedule does — cancels at any stage (incl.
+    during prefix-cache COW claims and preemption windows), deadlines,
+    encoder/executor faults, load shedding — the allocator stays
+    invariant-clean (free+owned+cached == num_pages by its own check),
+    no page or pin leaks, and the workload partitions into terminal
+    states exactly."""
+    rates = FaultRates(cancel_prob=cancel, deadline_prob=deadline,
+                       encoder_fault_prob=encoder, step_fault_prob=step,
+                       deadline_min_s=0.5, deadline_max_s=20.0)
+    plan = FaultPlan(seed=seed, rates=rates)
+    eng = _engine(plan, kv_pages=kv_pages, load_shed=shed,
+                  shed_after_iters=10)
+    reqs = _wl(40, seed=seed % 100)
+    eng.run(reqs)
+    _assert_clean(eng, reqs)
+
+
+# ---------------- router failover -------------------------------------------
+
+
+def test_router_failover_none_lost_none_double_finished():
+    _ex, classifier, _cfg, _prof, _est = sim_stack_cached()
+    cm = make_cost_model("llava-7b")
+    plan = FaultPlan(seed=0, replica_kills={0: 4.0})
+    router = Router([SimExecutor(cm), SimExecutor(cm)], classifier,
+                    EngineConfig(kv_pages=2048, token_budget=512),
+                    policy=POLICY, routing="least-loaded", faults=plan)
+    reqs = _wl(40, seed=10)
+    router.run_stepped(reqs)
+    assert not router.alive[0] and router.alive[1]
+    assert router.redispatched > 0 and not router.lost
+    assert all(r.is_terminal for r in reqs)
+    finished = [r.rid for eng in router.engines for r in eng.finished]
+    assert len(finished) == len(set(finished))
+    # survivors re-ran the dead replica's work from scratch
+    assert any(r.redispatches > 0 and r.state is State.FINISHED
+               for r in reqs)
+    survivor = router.engines[1]
+    survivor.allocator.check_invariants()
+    assert survivor.allocator.used_pages == 0
+    assert survivor.encoder_cache.stats()["pin_refs"] == 0
+
+
+def test_router_prefix_aware_routing_follows_content():
+    """prefix-aware routing sends a duplicate where the pages are: after
+    replica 1 finishes a video, a duplicate of the same content routes
+    there even if replica 0 is less loaded."""
+    _ex, classifier, _cfg, _prof, _est = sim_stack_cached()
+    cm = make_cost_model("llava-7b")
+    router = Router([SimExecutor(cm), SimExecutor(cm)], classifier,
+                    EngineConfig(kv_pages=2048, token_budget=512),
+                    policy=POLICY, routing="prefix-aware")
+    v1 = Request(rid="v1", modality=Modality.VIDEO, arrival=0.0,
+                 text_tokens=32, mm_units=784, prompt_tokens=816,
+                 output_tokens=8, mm_hash="vidA")
+    v2 = Request(rid="v2", modality=Modality.VIDEO, arrival=0.0,
+                 text_tokens=32, mm_units=784, prompt_tokens=816,
+                 output_tokens=8, mm_hash="vidA")
+    v3 = Request(rid="v3", modality=Modality.VIDEO, arrival=5.0,
+                 text_tokens=48, mm_units=784, prompt_tokens=832,
+                 output_tokens=8, mm_hash="vidA")
+    # v1+v2 run on replica 0 (content turns popular -> chain published);
+    # by v3's arrival that replica holds the pages and must attract it
+    # even though both replicas carry equal routed load
+    router.engines[0].run([v1, v2])
+    assert router._route(v3) == 0
+    assert router.engines[0].allocator.match_prefix(
+        v3.content_chunks(), v3.prompt_tokens - 1).tokens > 0
+
+
+def test_cancelled_after_prefill_publishes_chain_for_reuse():
+    """A cancelled request whose prefill completed leaves re-monetizable
+    KV: the published chain serves a later duplicate."""
+    a = Request(rid="a", modality=Modality.VIDEO, arrival=0.0,
+                text_tokens=32, mm_units=784, prompt_tokens=816,
+                output_tokens=500, mm_hash="vidB")
+    b = Request(rid="b", modality=Modality.VIDEO, arrival=0.01,
+                text_tokens=32, mm_units=784, prompt_tokens=816,
+                output_tokens=500, mm_hash="vidB")
+    c = Request(rid="c", modality=Modality.VIDEO, arrival=3.0,
+                text_tokens=48, mm_units=784, prompt_tokens=832,
+                output_tokens=8, mm_hash="vidB")
+    plan = FaultPlan(cancels={"a": ("running", 1), "b": ("running", 1)})
+    eng = _engine(plan)
+    eng.run([a, b, c])
+    assert a.state is State.CANCELLED and b.state is State.CANCELLED
+    assert c.state is State.FINISHED
+    assert c.cached_prefix_tokens > 0   # reclaimed the cancelled chain
+    _assert_clean(eng, [a, b, c])
+
+
+def test_abort_is_idempotent():
+    eng = _engine(None)
+    req = _wl(5, seed=11)[0]
+    pending = [req] + _wl(5, seed=11)[1:]
+    pending = eng.step(pending)
+    assert eng.cancel(req)
+    assert not eng.cancel(req)          # second abort: no-op
+    assert not eng._abort(req, State.FAILED, "x")
+    assert req.state is State.CANCELLED
+    assert len([r for r in eng.aborted if r.rid == req.rid]) == 1
