@@ -15,12 +15,14 @@ blocking it:
     the committed headline, never match it. Decision equivalence between
     the fast and legacy paths is still asserted exactly (by ``_compare``).
   * ``BENCH_executor.json`` — real-JAX batched-vs-legacy executor.
-    Token parity (batch curve AND the ragged context sweep) and the
-    recompile-key check (observed jit signatures == the analytic bucket
-    model, within the O(log) ``recompile_bound``) are exact gates (they
-    are deterministic); the batch-8 decode speedup and the
-    short-context ragged-vs-fixed speedup are wall-clock, so they only
-    have to clear generous floors of the committed headlines.
+    Token parity (batch curve, the ragged context sweep, AND the KV
+    capacity sweep), the recompile-key check (observed jit signatures
+    == the analytic bucket model, within the O(log) ``recompile_bound``)
+    and capacity-independence of the jit keys are exact gates (they are
+    deterministic); the batch-8 decode speedup, the short-context
+    ragged-vs-fixed speedup, and the capacity-sweep step-time spread
+    are wall-clock, so they only have to clear generous floors/ceilings
+    of the committed headlines.
   * ``BENCH_prefix.json`` — KV prefix cache. Real-executor token parity
     (cache on/off/legacy) and the sim hit/COW/reclassification counts
     are exact gates; the prefill-token savings and TTFT improvements are
@@ -155,6 +157,20 @@ def check_executor_baseline(failures: list[str],
     if not sweep["recompile_bound_ok"]:
         failures.append("executor/sweep: recompile keys exceed the O(log) "
                         "bound")
+    # capacity sweep: stores ride the transformer scan as donated carry,
+    # so KV capacity must never change emitted tokens or jit signatures
+    # (both deterministic, gated exactly)
+    cap = fresh["capacity_sweep"]
+    cap_ok = cap["token_parity"] and cap["keys_equal"]
+    print(f"  executor/capacity: parity {cap['token_parity']}  "
+          f"keys_equal {cap['keys_equal']}  "
+          f"[{'ok' if cap_ok else 'REGRESSION'}]")
+    if not cap["token_parity"]:
+        failures.append("executor/capacity: KV capacity changed emitted "
+                        "tokens (must be bit-exact)")
+    if not cap["keys_equal"]:
+        failures.append("executor/capacity: KV capacity leaked into jit "
+                        "signatures")
     if skip_wallclock:
         return
     committed = baseline["curve"]["8"]["speedup"]
@@ -185,6 +201,20 @@ def check_executor_baseline(failures: list[str],
         failures.append(f"executor/short_ctx_decode_speedup {got_s:.2f}x "
                         f"below break-even floor {floor_s:.2f}x (committed "
                         f"full-mode {committed_s:.2f}x)")
+    # the full-mode benchmark gates <10% flatness; the fast smoke times
+    # fewer rounds on a noisy shared runner, so the floor here only has
+    # to catch a return to O(capacity) step time (which measured >2x
+    # spread per 4x capacity before the carry refactor)
+    floor_c = 0.5
+    for shape in ("decode", "prefill"):
+        got_c = cap[f"{shape}_spread"]
+        status = "ok" if got_c < floor_c else "REGRESSION"
+        print(f"  executor/capacity_{shape}_spread: fresh fast-smoke "
+              f"{got_c:.1%}, ceiling {floor_c:.0%}  [{status}]")
+        if status != "ok":
+            failures.append(f"executor/capacity_{shape}_spread {got_c:.1%} "
+                            f"over the {floor_c:.0%} ceiling: step time "
+                            "scales with KV capacity again")
 
 
 def check_prefix_baseline(failures: list[str]) -> None:

@@ -18,6 +18,13 @@ Two experiments, both on the real reduced-JAX model (CPU):
   runs must emit identical tokens; the short-context rung must be ≥2×
   faster than fixed width (attention traffic scales with live context,
   not ``max_len``).
+* **Capacity sweep** — decode/prefill step time at *fixed live tokens*
+  with ``num_pages`` at 1×/4×/8× the demand-sized base. The paged
+  stores ride the transformer scan as donated carry, so step time must
+  be flat across capacities (<10% spread, full mode), emitted tokens
+  bit-exact, and jit keys identical (capacity never enters a
+  signature). Timings interleave round-robin across the capacity
+  executors to cancel CPU warmup drift.
 
 Full mode writes ``BENCH_executor.json`` (the committed baseline checked
 by benchmarks/check_regression.py):
@@ -33,7 +40,7 @@ from pathlib import Path
 
 from repro.cache import BlockAllocator
 from repro.configs import get_reduced
-from repro.serving.executors import ModelExecutor
+from repro.serving.executors import ExecutorConfig, ModelExecutor
 from repro.serving.request import Modality, Request, State
 from repro.serving.workload import generate, long_context_video
 
@@ -78,13 +85,15 @@ def expected_curve_keys(batch: int, decode_iters: int) -> set:
     return keys
 
 
-def _run_one(cfg, batch: int, decode_iters: int, legacy: bool):
+def _run_one(cfg, batch: int, decode_iters: int, legacy: bool,
+             num_pages: int | None = None):
     """Prefill `batch` requests, run timed decode iterations.
 
     Returns (tokens_per_s, prefill_wall_s, emitted_tokens, executor).
     """
-    ex = ModelExecutor(cfg, max_slots=max(16, batch), max_len=MAX_LEN,
-                       legacy=legacy)
+    ex = ModelExecutor(cfg, ExecutorConfig(
+        max_slots=max(16, batch), max_len=MAX_LEN, legacy=legacy,
+        num_pages=num_pages))
     alloc = BlockAllocator(num_pages=ex.allocator.num_pages, page_size=PAGE)
     ex.bind_allocator(alloc)
     reqs = [_mk(f"r{i}", PROMPT_BASE + 3 * i) for i in range(batch)]
@@ -150,15 +159,15 @@ def _sweep_one(cfg, context: int, decode_iters: int, *, ragged: bool,
 
     KV capacity is sized to the cell's demand via the ``num_pages``
     override — identical for the ragged and fixed runs, so the cell
-    isolates the *geometry* variable. (The default max_slots x max_len
-    sizing would swamp the step time in the transformer scan's
-    whole-store ys restack, which scales with store size — a separate
-    hot spot tracked in ROADMAP open items.)
+    isolates the *geometry* variable. (Step time no longer depends on
+    capacity itself — the stores ride the transformer scan as donated
+    carry; ``measure_capacity`` gates that directly.)
     """
     pages_per_row = -(-(context + SWEEP_BATCH + decode_iters + 8) // PAGE)
     num_pages = SWEEP_BATCH * pages_per_row + 8
-    ex = ModelExecutor(cfg, max_slots=2 * SWEEP_BATCH, max_len=max_len,
-                       legacy=legacy, ragged=ragged, num_pages=num_pages)
+    ex = ModelExecutor(cfg, ExecutorConfig(
+        max_slots=2 * SWEEP_BATCH, max_len=max_len, legacy=legacy,
+        ragged=ragged, num_pages=num_pages))
     alloc = BlockAllocator(num_pages=num_pages, page_size=PAGE)
     ex.bind_allocator(alloc)
 
@@ -250,6 +259,107 @@ def measure_sweep(fast: bool = False) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Capacity sweep
+# ---------------------------------------------------------------------------
+
+CAP_BATCH = 4
+CAP_MULTS_FULL = (1, 4, 8)
+CAP_MULTS_FAST = (1, 8)
+
+
+def _raw_step_args(ex, C: int, maxp: int):
+    """Hand-built ``_prefill_jit`` arguments for a C-token step: block
+    tables point every page at the trash row, so the scatter pays full
+    write traffic without touching live pages."""
+    jnp = ex.jnp
+    B = CAP_BATCH
+    toks = jnp.zeros((B, C), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    bt = jnp.full((B, maxp), ex.allocator.num_pages, jnp.int32)
+    lengths = jnp.full((B,), PROMPT_BASE, jnp.int32)
+    new_lens = jnp.full((B,), C, jnp.int32)
+    return toks, pos, bt, lengths, new_lens
+
+
+def measure_capacity(fast: bool = False) -> dict:
+    """Step time at *fixed live tokens* across a ``num_pages`` capacity
+    sweep (1x/4x/8x the demand-sized base). The stores ride the
+    transformer scan as donated carry, so prefill- and decode-shaped
+    steps must be flat across capacities, with bit-exact emitted tokens
+    and identical jit keys (capacity never appears in a jit signature).
+
+    Timing is **interleaved** round-robin across the capacity executors
+    — sequential runs see CPU warmup drift that dwarfs any real capacity
+    term and would fail the flatness gate spuriously — and the capacity
+    order *rotates* each round: the first timed call after a shape
+    switch pays a fixed transition cost, which would otherwise land on
+    the same capacity every round and read as a spurious spread.
+    """
+    import jax
+    cfg = get_reduced(ARCH)
+    mults = CAP_MULTS_FAST if fast else CAP_MULTS_FULL
+    decode_iters = 8 if fast else 16
+    timing_rounds = 12 if fast else 30
+    pages_per_row = -(-(PROMPT_BASE + 3 * CAP_BATCH + decode_iters + 8)
+                      // PAGE)
+    base_pages = CAP_BATCH * pages_per_row + 8
+
+    # engine-style run per capacity: emitted-token parity + jit keys
+    runs = {}
+    for m in mults:
+        _, _, tok, ex = _run_one(cfg, CAP_BATCH, decode_iters, legacy=False,
+                                 num_pages=base_pages * m)
+        runs[m] = (tok, ex)
+    m0 = mults[0]
+    token_parity = all(runs[m][0] == runs[m0][0] for m in mults)
+    keys_equal = all(runs[m][1].recompile_keys == runs[m0][1].recompile_keys
+                     for m in mults)
+
+    # raw jitted-step timing, interleaved across capacities
+    shapes = {"decode": (1, _bucket(pages_per_row)),
+              "prefill": (_bucket(PROMPT_BASE), _bucket(pages_per_row))}
+    samples = {shape: {m: [] for m in mults} for shape in shapes}
+    for shape, (C, maxp) in shapes.items():
+        for m in mults:                      # compile + warm each signature
+            ex = runs[m][1]
+            for _ in range(2):
+                out, ex._stores = ex._prefill_jit(
+                    ex.params, ex._stores, *_raw_step_args(ex, C, maxp))
+                jax.block_until_ready((out, ex._stores))
+    for rnd in range(timing_rounds):
+        rot = rnd % len(mults)
+        order = mults[rot:] + mults[:rot]
+        for shape, (C, maxp) in shapes.items():
+            for m in order:
+                ex = runs[m][1]
+                args = _raw_step_args(ex, C, maxp)
+                t0 = time.perf_counter()
+                out, ex._stores = ex._prefill_jit(ex.params, ex._stores,
+                                                  *args)
+                jax.block_until_ready((out, ex._stores))
+                samples[shape][m].append(time.perf_counter() - t0)
+
+    med = {shape: {m: statistics.median(s) for m, s in per.items()}
+           for shape, per in samples.items()}
+    spread = {shape: (max(v.values()) - min(v.values())) / min(v.values())
+              for shape, v in med.items()}
+    return {
+        "batch": CAP_BATCH,
+        "prompt": PROMPT_BASE,
+        "base_pages": base_pages,
+        "page_multipliers": list(mults),
+        "decode_step_ms": {str(m): round(v * 1e3, 3)
+                           for m, v in med["decode"].items()},
+        "prefill_step_ms": {str(m): round(v * 1e3, 3)
+                            for m, v in med["prefill"].items()},
+        "decode_spread": round(spread["decode"], 4),
+        "prefill_spread": round(spread["prefill"], 4),
+        "token_parity": token_parity,
+        "keys_equal": keys_equal,
+    }
+
+
 def measure(fast: bool = False):
     cfg = get_reduced(ARCH)
     batches = [1, 4, 8] if fast else [1, 4, 8, 16]
@@ -287,6 +397,7 @@ def measure(fast: bool = False):
         "recompile_exact": recompile_exact,
         "recompile_keys": recompiles,
         "context_sweep": measure_sweep(fast=fast),
+        "capacity_sweep": measure_capacity(fast=fast),
     }
 
 
@@ -315,6 +426,22 @@ def main(fast: bool = False):
                     f"{cell['decode_speedup']},step_time_ratio")
     print(f"  sweep parity: {sweep['token_parity']}  recompile bound ok: "
           f"{sweep['recompile_bound_ok']}")
+    cap = results["capacity_sweep"]
+    for shape in ("decode", "prefill"):
+        steps = "  ".join(f"{m}x {v:7.3f} ms"
+                          for m, v in cap[f"{shape}_step_ms"].items())
+        print(f"  capacity {shape:>7}: {steps}  "
+              f"spread {cap[f'{shape}_spread'] * 100:.1f}%")
+    print(f"  capacity parity: {cap['token_parity']}  "
+          f"jit keys equal: {cap['keys_equal']}")
+    rows.append(f"real_executor_capacity_decode_spread,"
+                f"{cap['decode_spread']},frac")
+    rows.append(f"real_executor_capacity_prefill_spread,"
+                f"{cap['prefill_spread']},frac")
+    assert cap["token_parity"], \
+        "KV capacity changed emitted tokens (must be bit-exact)"
+    assert cap["keys_equal"], \
+        "KV capacity leaked into jit signatures"
     assert results["token_parity"], \
         "batched path no longer emits token-identical streams to legacy"
     assert results["recompile_exact"], \
@@ -327,6 +454,10 @@ def main(fast: bool = False):
     if not fast:
         b8 = results["curve"]["8"]["speedup"]
         assert b8 >= 3.0, f"batch-8 speedup {b8:.2f}x below the 3x target"
+        for shape in ("decode", "prefill"):
+            assert cap[f"{shape}_spread"] < 0.10, \
+                (f"{shape} step time varies {cap[f'{shape}_spread']:.1%} "
+                 "across the 1x->8x capacity sweep (gate: <10%)")
         short = sweep["short_context_decode_speedup"]
         assert short >= 2.0, \
             f"short-context ragged decode only {short:.2f}x over " \

@@ -1,32 +1,58 @@
 """Paged KV store: JAX-side page arrays + write/read ops per layer stack.
 
-Layout per layer: (num_pages, page_size, KV, hd), matching the Pallas
-paged-attention kernel. Writes are block-table scatters; the whole store is
-functionally updated (donated in jit on real deployments).
-
 ``PagedKVStore`` is the single-layer view (engine bookkeeping, kernel
-tests).  The serving executor's batched path holds one ``PagedStackStore``
-per scan stage instead: the same page arrays with a leading ``layers`` dim
-so the transformer's ``lax.scan`` over stacked layer weights can consume
-the KV pages as scan xs/ys (DESIGN.md §Batched execution path).  Batched
-multi-sequence writes go through ``scatter_pages`` — one block-table
-scatter for every (sequence, token) pair in the step, with ragged rows
-routed to a trash page.
+tests): (num_pages, page_size, KV, hd) arrays matching the Pallas
+paged-attention kernel, functionally updated by block-table scatters.
 
-SSM/xLSTM state caches have *constant* per-request footprint, so they use a
-slot store (one row per active request) rather than pages — the classifier
-sees this as a constant memory feature (see DESIGN.md §Arch-applicability).
+``PagedStackStore`` is the serving executor's batched container — the
+paged KV of one *stack* of layers (one scan stage's block position),
+flattened so the whole store rides through the transformer's
+``jax.lax.scan`` as **carry**: leaves are
+``(layers * pages_per_layer, page, KV, hd)`` and layer ``l``'s page ``p``
+lives at row ``l * pages_per_layer + p``.  The scan's per-step layer
+index offsets reads/writes into the flat pool, so a batched step touches
+only resident pages — donated under jit, XLA aliases the carry in place
+and step time is independent of store *capacity* (DESIGN.md §Ragged
+paged execution).  Batched multi-sequence writes go through
+``scatter_pages`` — one block-table scatter for every (sequence, token)
+pair in the step, with ragged padding routed to the layer's trash page.
+
+The **container dtype** is backend-dependent (``store_dtype()``): bf16
+natively on TPU; f32 on CPU, where XLA lowers bf16 scatters through
+whole-array f32 convert round-trips (an O(capacity) cost that would
+defeat the carry layout).  Stored *values* are always rounded through
+bf16 first, so the numbers a reader gets back are bit-identical either
+way and emitted-token parity against the bf16 legacy cache holds exactly.
+
+SSM/xLSTM state caches have *constant* per-request footprint, so they use
+a slot store (one row per active request) rather than pages — the
+classifier sees this as a constant memory feature (see DESIGN.md
+§Arch-applicability).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
 
+def store_dtype():
+    """Container dtype for paged stack stores on this backend.
+
+    TPU scatters bf16 natively; XLA:CPU expands a bf16 scatter into a
+    loop over f32 *copies of the whole array* (one convert each way per
+    update), making every store write O(capacity).  An f32 container
+    keeps the scatter in place on CPU; values are bf16-rounded before
+    storing either way (f32 represents every bf16 exactly), so readers
+    see identical bits on both backends.
+    """
+    return jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
+
+
 def scatter_pages(k_pages, v_pages, k_new, v_new, block_table, start,
-                  new_lens, trash_page):
+                  new_lens, trash_page, base=0):
     """Scatter S new tokens for each of B sequences into shared page arrays.
 
     k_new/v_new: (B, S, KV, hd) — per-sequence new tokens, right-padded;
@@ -35,7 +61,11 @@ def scatter_pages(k_pages, v_pages, k_new, v_new, block_table, start,
     new_lens: (B,) int32 valid tokens per row (<= S) — padding tokens and
     whole padding rows are routed to ``trash_page`` so one fused scatter
     covers the ragged batch;
-    trash_page: page id reserved for discarded writes (never mapped).
+    trash_page: page id reserved for discarded writes (never mapped);
+    base: row offset added to every resolved page id — a
+    ``PagedStackStore`` passes ``layer * pages_per_layer`` so per-layer
+    tables index the flat pool (the per-layer trash lands at
+    ``base + trash_page``).
 
     Returns (k_pages, v_pages) functionally updated.
     """
@@ -46,7 +76,7 @@ def scatter_pages(k_pages, v_pages, k_new, v_new, block_table, start,
     valid = jnp.arange(S, dtype=jnp.int32)[None, :] < new_lens[:, None]
     posc = jnp.minimum(pos, max_tokens - 1)  # clamp before table lookup
     pids = jnp.take_along_axis(block_table, posc // page, axis=1)
-    pids = jnp.where(valid, pids, trash_page)
+    pids = jnp.where(valid, pids, trash_page) + base
     offs = posc % page
     flat = lambda a: a.reshape(B * S, *a.shape[2:])  # noqa: E731
     k_pages = k_pages.at[flat(pids), flat(offs)].set(
@@ -113,38 +143,102 @@ jax.tree_util.register_pytree_node(
 )
 
 
+@runtime_checkable
+class PagedStore(Protocol):
+    """The paged-store surface shared by the transformer's paged cache
+    protocol and the serving executor (DESIGN.md §Ragged paged execution).
+
+    A conforming store is a pytree whose array leaves ride the
+    transformer ``lax.scan`` as **carry** — every method below must
+    return leaves of unchanged shape/dtype (carry aliasing is what makes
+    step time capacity-independent).  Per-layer addressing is explicit:
+    ``write_batch``/``gather_batch``/``layer_table`` take the scan-step
+    ``layer`` index and offset into the flat page pool; block tables
+    stay in allocator page-id space (0..pages_per_layer-2, with
+    ``pages_per_layer-1`` the per-layer trash page for ragged padding).
+
+    Construction goes through ``build`` (the executor sizes
+    ``pages_per_layer`` to allocator capacity + 1 trash page) and the
+    prefix cache's copy-on-write boundary copy through ``copy_page``.
+    """
+
+    @property
+    def pages_per_layer(self) -> int: ...
+
+    @property
+    def page_size(self) -> int: ...
+
+    @property
+    def trash_page(self) -> int: ...
+
+    def write_batch(self, k_new, v_new, block_table, start, new_lens, *,
+                    layer): ...
+
+    def gather_batch(self, block_table, *, layer): ...
+
+    def layer_table(self, block_table, layer): ...
+
+    def copy_page(self, src, dst): ...
+
+
 @dataclass
 class PagedStackStore:
-    """Paged KV for one *stack* of layers: (layers, P, page, KV, hd).
+    """Paged KV for one stack of ``layers`` layers, flattened for scan
+    carry: leaves are (layers * pages_per_layer, page, KV, hd) and layer
+    ``l``'s page ``p`` is row ``l * pages_per_layer + p``.
 
-    One per attention block position per scan stage.  Registered as a
-    pytree so ``jax.lax.scan`` over the stacked layer weights can slice the
-    leading ``layers`` axis of both leaves and hand each scan step a
-    per-layer ``PagedStackStore`` view (leaves then (P, page, KV, hd));
-    the updated pages come back out as scan ys with the layer dim
-    restacked.  The whole container is donated under jit so XLA updates
-    the page arrays in place across iterations.
+    One per attention block position per scan stage.  The whole store
+    rides the transformer's ``lax.scan`` as carry (the per-step layer
+    index arrives as scan xs), so per-layer reads/writes are
+    layer-offset gathers/scatters on resident pages only — no
+    capacity-shaped restack per call.  The last page of every layer's
+    range is that layer's trash page (ragged padding writes), which is
+    why ``pages_per_layer`` is the allocator's ``num_pages + 1``.
+    Donated under jit, XLA aliases the carry in place across iterations.
+
+    The Pallas paged kernels need no layout awareness: ``layer_table``
+    offsets a block table into the flat pool and the kernels just see a
+    bigger page array.
     """
     k_pages: jax.Array
     v_pages: jax.Array
+    layers: int          # static pytree aux (leading-row stride factor)
 
     @classmethod
-    def create(cls, layers: int, num_pages: int, page_size: int,
-               kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
-        shape = (layers, num_pages, page_size, kv_heads, head_dim)
-        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    def build(cls, layers: int, pages_per_layer: int, page_size: int,
+              kv_heads: int, head_dim: int, dtype=None):
+        dtype = store_dtype() if dtype is None else dtype
+        shape = (layers * pages_per_layer, page_size, kv_heads, head_dim)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), layers)
 
     @property
-    def page_size(self):
-        return self.k_pages.shape[-3]
+    def pages_per_layer(self) -> int:
+        return self.k_pages.shape[0] // self.layers
 
-    def write_batch(self, k_new, v_new, block_table, start, new_lens,
-                    trash_page):
-        """Per-layer view write (leaves must be layer slices, ndim 4)."""
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def trash_page(self) -> int:
+        return self.pages_per_layer - 1
+
+    def layer_table(self, block_table, layer):
+        """Per-layer block table -> absolute rows in the flat pool."""
+        return block_table + layer * self.pages_per_layer
+
+    def write_batch(self, k_new, v_new, block_table, start, new_lens, *,
+                    layer):
+        """Scatter one layer's new tokens (``layer`` may be traced — it
+        is the scan's per-step index).  Values are rounded through bf16
+        before landing so the container dtype never changes what a
+        reader sees (see ``store_dtype``)."""
         k_pages, v_pages = scatter_pages(
-            self.k_pages, self.v_pages, k_new, v_new, block_table, start,
-            new_lens, trash_page)
-        return PagedStackStore(k_pages, v_pages)
+            self.k_pages, self.v_pages,
+            k_new.astype(jnp.bfloat16), v_new.astype(jnp.bfloat16),
+            block_table, start, new_lens, self.trash_page,
+            base=layer * self.pages_per_layer)
+        return PagedStackStore(k_pages, v_pages, self.layers)
 
     def copy_page(self, src, dst) -> "PagedStackStore":
         """Copy one page's K/V across every layer of the stack — the
@@ -152,27 +246,28 @@ class PagedStackStore:
         valid cached page; dst becomes the claimer's private copy).
         ``src``/``dst`` may be traced scalars, so one jit signature
         serves every copy."""
-        def cp(a):
-            page = jax.lax.dynamic_index_in_dim(a, src, axis=1,
-                                                keepdims=True)
-            return jax.lax.dynamic_update_slice_in_dim(a, page, dst,
-                                                       axis=1)
-        return PagedStackStore(cp(self.k_pages), cp(self.v_pages))
+        rows = jnp.arange(self.layers, dtype=jnp.int32) * \
+            self.pages_per_layer
 
-    def gather_batch(self, block_table):
-        """Per-layer view: (B, maxp) -> contiguous (B, maxp*page, KV, hd)."""
+        def cp(a):
+            return a.at[rows + dst].set(a[rows + src])
+        return PagedStackStore(cp(self.k_pages), cp(self.v_pages),
+                               self.layers)
+
+    def gather_batch(self, block_table, *, layer):
+        """One layer's view: (B, maxp) -> contiguous
+        (B, maxp*page, KV, hd) k, v."""
+        rows = self.layer_table(block_table, layer)
         B, maxp = block_table.shape
-        k = self.k_pages[block_table].reshape(
-            B, -1, *self.k_pages.shape[-2:])
-        v = self.v_pages[block_table].reshape(
-            B, -1, *self.v_pages.shape[-2:])
+        k = self.k_pages[rows].reshape(B, -1, *self.k_pages.shape[-2:])
+        v = self.v_pages[rows].reshape(B, -1, *self.v_pages.shape[-2:])
         return k, v
 
 
 jax.tree_util.register_pytree_node(
     PagedStackStore,
-    lambda s: ((s.k_pages, s.v_pages), None),
-    lambda _, c: PagedStackStore(*c),
+    lambda s: ((s.k_pages, s.v_pages), s.layers),
+    lambda layers, c: PagedStackStore(c[0], c[1], layers),
 )
 
 

@@ -18,8 +18,8 @@ from repro.core.estimator import ImpactEstimator
 from repro.core.profiler import WorkloadProfiler
 from repro.core.scheduler import make_policy
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.executors import ModelExecutor, SimExecutor, \
-    cost_model_for_arch, make_cost_model
+from repro.serving.executors import ExecutorConfig, ModelExecutor, \
+    SimExecutor, cost_model_for_arch, make_cost_model
 from repro.serving.metrics import fmt_table, goodput, summarize
 from repro.serving.workload import WorkloadConfig, generate, \
     profiling_workload
@@ -42,16 +42,17 @@ def build_stack(arch: str, executor_kind: str = "sim", *,
         # KV capacity decoupled from the max_slots x max_len slot
         # geometry (prefix-cache-heavy configs want far more resident
         # KV than the running set's context windows).
-        executor = ModelExecutor(get_reduced(arch), max_slots=16,
-                                 max_len=256,
-                                 legacy=(executor_kind == "real-legacy"),
-                                 num_pages=kv_pages)
+        exec_cfg = ExecutorConfig(
+            max_slots=16, max_len=256,
+            legacy=(executor_kind == "real-legacy"),
+            num_pages=kv_pages).resolved()
+        executor = ModelExecutor(get_reduced(arch), exec_cfg)
         prof_reqs = profiling_workload(n_per_modality=8)
-        if kv_pages is None:
-            # real mode: KV capacity = the executor's paged-store capacity
-            # so engine page ids index the stores directly (the default
-            # A100-sized kv_pages would build gigabyte page arrays)
-            kv_pages = executor.capacity_pages
+        # real mode: the engine's KV capacity IS the resolved executor
+        # capacity — one derivation (ExecutorConfig.resolved), so the
+        # admission path and the paged stores agree by construction (the
+        # default A100-sized kv_pages would build gigabyte page arrays)
+        kv_pages = exec_cfg.num_pages
     profile = WorkloadProfiler(executor, arch).build(prof_reqs)
     est = ImpactEstimator.train(profile)
     classifier = (NaiveClassifier(est) if naive_classifier

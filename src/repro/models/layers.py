@@ -191,12 +191,16 @@ def paged_attention_block(x, p, cfg: ModelConfig, *, positions, store, ctx,
     caller, like ``attention_block``).
 
     x: (B, S, D) — S new tokens per sequence, right-padded (ragged geometry
-    in ``ctx``); store: per-layer ``PagedStackStore`` view (leaves (P, page,
-    KV, hd)); ctx: dict with
-      block_table (B, max_pages) int32 — page ids per sequence (padding
-        entries point at the trash page, which is always the store's last);
+    in ``ctx``); store: the *whole* flat ``PagedStackStore`` riding the
+    transformer scan as carry (leaves (layers*pages_per_layer, page, KV,
+    hd)); ctx: dict with
+      block_table (B, max_pages) int32 — allocator page ids per sequence
+        (padding entries point at the per-layer trash page id,
+        ``store.trash_page``);
       lengths (B,) int32 — context tokens already written per sequence;
-      new_lens (B,) int32 — valid new tokens per row (<= S).
+      new_lens (B,) int32 — valid new tokens per row (<= S);
+      layer — this scan step's layer index (traced), offsetting every
+        page access into the flat pool via ``store.layer_table``.
     impl: 'kernel' routes S==1 decode through the Pallas paged-attention
     kernel and S>1 chunked prefill through the paged-prefill flash kernel
     (native on TPU, interpret elsewhere) — both attend directly over
@@ -215,20 +219,22 @@ def paged_attention_block(x, p, cfg: ModelConfig, *, positions, store, ctx,
     k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_style)
     q = shard_act(q, "batch", "seq", "heads", None)
     bt, lengths, new_lens = ctx["block_table"], ctx["lengths"], ctx["new_lens"]
-    trash = store.k_pages.shape[0] - 1
-    store = store.write_batch(k, v, bt, lengths, new_lens, trash)
+    layer = ctx["layer"]
+    store = store.write_batch(k, v, bt, lengths, new_lens, layer=layer)
     if impl == "kernel" and S == 1:
         from repro.kernels import ops as kops
         out = kops.paged_attention(
-            q[:, 0], store.k_pages, store.v_pages, bt, lengths + new_lens,
+            q[:, 0], store.k_pages, store.v_pages,
+            store.layer_table(bt, layer), lengths + new_lens,
             softcap=cfg.logit_softcap)[:, None]
     elif impl == "kernel":
         from repro.kernels import ops as kops
         out = kops.paged_prefill_attention(
-            q, store.k_pages, store.v_pages, bt, lengths, new_lens,
-            softcap=cfg.logit_softcap)
+            q, store.k_pages, store.v_pages, store.layer_table(bt, layer),
+            lengths, new_lens, softcap=cfg.logit_softcap)
     else:
-        ck, cv = store.gather_batch(bt)      # (B, max_pages*page, KV, hd)
+        # (B, max_pages*page, KV, hd) — this layer's resident pages only
+        ck, cv = store.gather_batch(bt, layer=layer)
         Tk = ck.shape[1]
         qpos = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
         mask = jnp.arange(Tk, dtype=jnp.int32)[None, None, :] <= \

@@ -291,9 +291,10 @@ def _apply_attnish(x, bp, bt, cfg, *, positions, q_start, cache, enc_out, idx,
     aux = jnp.zeros((), jnp.float32)
     h = _norm(x, bp, cfg, "ln1")
     if paged_ctx is not None:
-        # batched paged-KV serving path: cache is a per-layer
-        # PagedStackStore view; block table / ragged lengths ride in
-        # paged_ctx (see DESIGN.md §Batched execution path). Sliding-window
+        # batched paged-KV serving path: cache is the whole flat
+        # PagedStackStore (scan carry); block table / ragged lengths /
+        # this step's layer index ride in paged_ctx (see DESIGN.md
+        # §Batched execution path). Sliding-window
         # and cross-attention blocks keep the dense slot cache — the
         # executor gates which archs take this path.
         if bt not in (ATTN, ATTN_MOE):
@@ -414,6 +415,35 @@ def _run_stages(x, stage_params, stage_caches, patternized, cfg, *,
         sp = stage_params[si]
         sc = stage_caches[si] if stage_caches is not None else None
 
+        if paged_ctx is not None and sc is not None:
+            # batched paged serving: the stage's {"b<i>": PagedStackStore}
+            # stores ride the scan as *carry* (donated at the jit boundary
+            # => XLA aliases them in place), and the per-step layer index
+            # rides as xs to offset reads/writes into the flat page pool.
+            # Consuming the stores as xs/ys here (the old layout) restacked
+            # the whole page array every call — an O(store capacity) copy
+            # per step that the carry layout eliminates.
+            def paged_body(carry, per_layer, period=period):
+                xx, aux, stores = carry
+                lp, li = per_layer
+                new_stores = {}
+                for bi, bt in enumerate(period):
+                    xx, ns, a = apply_block(
+                        xx, lp[f"b{bi}"], bt, cfg, positions=positions,
+                        q_start=q_start, cache=stores[f"b{bi}"],
+                        enc_out=enc_out, idx=idx,
+                        paged_ctx=dict(paged_ctx, layer=li),
+                        attn_impl=attn_impl)
+                    new_stores[f"b{bi}"] = ns
+                    aux = aux + a
+                return (xx, aux, new_stores), None
+
+            (x, total_aux, nc), _ = jax.lax.scan(
+                paged_body, (x, total_aux, sc),
+                (sp, jnp.arange(reps, dtype=jnp.int32)))
+            new_caches.append(nc)
+            continue
+
         def body(carry, per_layer, period=period):
             xx, aux = carry
             lp, lc = per_layer
@@ -481,11 +511,15 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None,
     enc_frames: (B, T_enc, D) stub audio frames (whisper).
     cache: cache tree from cache_decls (prefill-with-cache / decode), or None
       — OR a *paged* cache for the batched serving path: a dict with
-      "stages" (per-stage {"b<i>": PagedStackStore}), "block_table" (B,
-      max_pages), "lengths" (B,) context written per row, and "new_lens"
-      (B,) valid new tokens per row. The presence of "block_table" selects
-      the paged protocol; attn_impl ('gather' | 'kernel') picks the decode
-      attention backend (see layers.paged_attention_block).
+      "stages" (per-stage {"b<i>": PagedStackStore} — flat scan-carry
+      stores, see cache.paged.PagedStore), "block_table" (B, max_pages),
+      "lengths" (B,) context written per row, and "new_lens" (B,) valid
+      new tokens per row. The presence of "block_table" selects the
+      paged protocol: stores ride the layer scan as carry (donate them
+      at the jit boundary for in-place updates) and the per-step layer
+      index addresses the flat page pool; attn_impl ('gather' |
+      'kernel') picks the decode attention backend (see
+      layers.paged_attention_block).
     last_pos: (B,) int32 — gather this position per row before the lm_head
       (ragged packed prefill: only each row's last real token needs logits).
     Returns (logits (B,S,V), new_cache_or_None, aux_loss).

@@ -18,9 +18,10 @@ two emit bit-identical tokens).
 from __future__ import annotations
 
 import time
+import warnings
 import zlib
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -215,6 +216,60 @@ class SimExecutor:
         return dur
 
 
+@dataclass(frozen=True)
+class ExecutorConfig:
+    """Validated construction surface for ``ModelExecutor``.
+
+    One place for what used to be ``__init__`` kwarg sprawl; Engine,
+    Router, benchmarks and tests construct through it (the bare kwargs
+    are still accepted for one release via a deprecation shim).
+
+    ``resolved()`` is the single derivation point for the ``num_pages``
+    default from slot geometry — the constructor and
+    ``launch.serve.build_stack`` previously each re-derived it, so the
+    admission path and the paged stores agree by construction now.
+    """
+    max_slots: int = 8
+    max_len: int = 512
+    seed: int = 0
+    legacy: bool = False
+    attn_impl: str = "auto"        # auto | kernel | gather
+    page_size: int = 16
+    num_pages: int | None = None   # None -> resolved() fills the default
+    ragged: bool = True
+
+    def __post_init__(self):
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.page_size < 1:
+            raise ValueError(
+                f"page_size must be >= 1, got {self.page_size}")
+        if self.attn_impl not in ("auto", "kernel", "gather"):
+            raise ValueError(
+                f"attn_impl must be 'auto', 'kernel' or 'gather', got "
+                f"{self.attn_impl!r}")
+        if self.num_pages is not None and self.num_pages < 1:
+            raise ValueError(
+                f"num_pages must be >= 1 (or None), got {self.num_pages}")
+
+    @property
+    def default_num_pages(self) -> int:
+        """KV capacity implied by the slot geometry: pages covering
+        ``max_slots`` full context windows."""
+        return max(1, self.max_slots * self.max_len // self.page_size)
+
+    def resolved(self) -> "ExecutorConfig":
+        """Fill every derived field; idempotent. An explicit
+        ``num_pages`` decouples KV capacity from the slot geometry
+        (prefix-cache-heavy configs hold far more resident KV than
+        ``max_slots x max_len`` implies)."""
+        if self.num_pages is not None:
+            return self
+        return replace(self, num_pages=self.default_num_pages)
+
+
 class ModelExecutor:
     """Real-JAX backend over a reduced model.
 
@@ -223,7 +278,11 @@ class ModelExecutor:
     allocator's page lists become real block tables. Each iteration runs
     as at most two jit-compiled calls — a packed ragged prefill over this
     iteration's chunks and one fused decode step over the entire running
-    set — with page stores donated so XLA updates them in place. Batch,
+    set — with page stores donated so XLA updates them in place. The
+    stores ride the transformer's layer scan as *carry* (flat
+    layers x pages layout, see cache.paged.PagedStore), so a step never
+    copies the page arrays and its cost is independent of KV store
+    *capacity* — only live tokens are touched. Batch,
     chunk, AND block-table width are bucketed to powers of two (the table
     rounds the batch's max live page count up, capped at ``max_pages``),
     so attention/scatter traffic scales with live context instead of the
@@ -247,52 +306,64 @@ class ModelExecutor:
     + cache + kernels end-to-end.
     """
 
-    def __init__(self, cfg, max_slots: int = 8, max_len: int = 512, seed=0,
-                 *, legacy: bool = False, attn_impl: str = "auto",
-                 page_size: int = 16, num_pages: int | None = None,
-                 ragged: bool = True):
+    def __init__(self, cfg, config: ExecutorConfig | None = None, **kwargs):
         import jax
         import jax.numpy as jnp
 
         from repro.cache import BlockAllocator
         from repro.models import transformer as T
         from repro.models.params import init_params
+        if config is None:
+            # deprecation shim (one release): the old kwarg construction
+            # surface maps 1:1 onto ExecutorConfig fields
+            if kwargs:
+                warnings.warn(
+                    "constructing ModelExecutor from bare keyword "
+                    "arguments is deprecated; pass "
+                    "ExecutorConfig(...) instead",
+                    DeprecationWarning, stacklevel=2)
+            config = ExecutorConfig(**kwargs)
+        elif kwargs:
+            raise TypeError(
+                "pass either an ExecutorConfig or the deprecated bare "
+                f"kwargs, not both: {sorted(kwargs)}")
+        config = config.resolved()
+        self.config = config
         self.jnp = jnp
         self.jax = jax
         self.T = T
         self.cfg = cfg
-        self.max_len = max_len
-        self.max_slots = max_slots
+        self.max_len = config.max_len
+        self.max_slots = config.max_slots
         self.paged_ok = T.paged_supported(cfg)
-        self.legacy = legacy or not self.paged_ok
+        self.legacy = config.legacy or not self.paged_ok
         # ragged=False pins the block table at the max_pages cap — the
         # fixed-geometry ablation/baseline for the context-sweep benchmark
-        self.ragged = ragged
-        if attn_impl == "auto":
+        self.ragged = config.ragged
+        if config.attn_impl == "auto":
             # Pallas kernel natively on TPU; pure-JAX gather+mha path on
             # CPU (the interpret-mode kernel replays the grid in Python —
             # fine for tests, not for the serving hot loop)
-            attn_impl = "kernel" if jax.default_backend() == "tpu" else \
-                "gather"
-        self.attn_impl = attn_impl
-        key = jax.random.PRNGKey(seed)
+            self.attn_impl = ("kernel" if jax.default_backend() == "tpu"
+                              else "gather")
+        else:
+            self.attn_impl = config.attn_impl
+        key = jax.random.PRNGKey(config.seed)
         self.params = init_params(T.model_decls(cfg), key)
         # dense per-request slot caches: only the legacy path keeps them
         # (the batched path retires the slot store for attention KV)
-        self.caches = ([init_params(T.cache_decls(cfg, 1, max_len), key)
-                        for _ in range(max_slots)] if self.legacy else None)
+        self.caches = ([init_params(T.cache_decls(cfg, 1, self.max_len), key)
+                        for _ in range(self.max_slots)]
+                       if self.legacy else None)
         self.slot_of: dict[str, int] = {}
-        self.free_slots = list(range(max_slots))
+        self.free_slots = list(range(self.max_slots))
         # page accounting: replaced by the engine's allocator via
-        # bind_allocator; standalone use gets a private one. num_pages
-        # decouples KV capacity from the slot geometry (prefix-cache-heavy
-        # configs keep far more resident KV than max_slots * max_len):
-        # launch plumbs EngineConfig.kv_pages through here so the paged
-        # stores are sized to the engine's capacity from the start.
-        self.allocator = BlockAllocator(
-            num_pages=(num_pages if num_pages is not None
-                       else max(1, max_slots * max_len // page_size)),
-            page_size=page_size)
+        # bind_allocator; standalone use gets a private one sized by the
+        # resolved config (launch plumbs EngineConfig.kv_pages through
+        # ExecutorConfig.num_pages so the paged stores match the
+        # engine's capacity from the start).
+        self.allocator = BlockAllocator(num_pages=config.num_pages,
+                                        page_size=config.page_size)
         self._stores = None           # lazy: [{bname: PagedStackStore}]
         self._ctx: dict[str, int] = {}        # KV tokens written per rid
         self._isolated_ttft: dict[str, float] = {}  # measured profile
@@ -341,26 +412,26 @@ class ModelExecutor:
 
     def _make_stores(self):
         from repro.cache.paged import PagedStackStore
-        jnp = self.jnp
         cfg = self.cfg
-        P = self.allocator.num_pages + 1          # +1: trash page
+        ppl = self.allocator.num_pages + 1    # +1: per-layer trash page
         page = self.allocator.page_size
         bytes_total = 0
         stores = []
         for period, reps in cfg.stages():
             stage = {}
             for bi, _bt in enumerate(period):
-                s = PagedStackStore.create(
-                    reps, P, page, cfg.num_kv_heads, cfg.hd,
-                    dtype=jnp.bfloat16)
-                bytes_total += 2 * s.k_pages.size * 2
+                s = PagedStackStore.build(
+                    reps, ppl, page, cfg.num_kv_heads, cfg.hd)
+                bytes_total += (s.k_pages.size + s.v_pages.size) * \
+                    s.k_pages.dtype.itemsize
                 stage[f"b{bi}"] = s
             stores.append(stage)
         if bytes_total > 8 << 30:
             raise ValueError(
                 f"paged stores would need {bytes_total / 2**30:.1f} GiB "
-                f"({P} pages x {page}); size EngineConfig.kv_pages to the "
-                "executor (serve.build_stack does this for real mode)")
+                f"({ppl} pages/layer x {page}); size EngineConfig.kv_pages "
+                "to the executor (serve.build_stack does this for real "
+                "mode)")
         return stores
 
     @property

@@ -11,7 +11,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.cache import BlockAllocator
-from repro.serving.executors import ModelExecutor, SlotCapacityError
+from repro.serving.executors import ExecutorConfig, ModelExecutor, \
+    SlotCapacityError
 from repro.serving.request import Modality, Request, State
 
 # ---------------- paged kernel: ragged lengths vs the jnp oracle ------------
@@ -92,8 +93,8 @@ def _executor(legacy: bool) -> ModelExecutor:
     if key not in _EXECUTORS:
         from repro.configs import get_reduced
         _EXECUTORS[key] = ModelExecutor(
-            get_reduced("chatglm3-6b"), max_slots=8, max_len=256,
-            legacy=legacy)
+            get_reduced("chatglm3-6b"),
+            ExecutorConfig(max_slots=8, max_len=256, legacy=legacy))
     return _EXECUTORS[key]
 
 
@@ -252,7 +253,7 @@ def test_kernel_attn_impl_matches_gather_on_decode():
     from repro.configs import get_reduced
     from repro.models import transformer as T
     cfg = get_reduced("chatglm3-6b")
-    ex = ModelExecutor(cfg, max_slots=2, max_len=64)
+    ex = ModelExecutor(cfg, ExecutorConfig(max_slots=2, max_len=64))
     alloc = BlockAllocator(num_pages=ex.allocator.num_pages, page_size=16)
     ex.bind_allocator(alloc)
     reqs = [_mk_req(9, 3), _mk_req(14, 3)]
@@ -283,7 +284,8 @@ def test_block_table_width_buckets_to_live_context():
     """Short-context batches compile narrow block tables: the signature's
     page bucket tracks live pages, not the max_len/page_size cap."""
     from repro.configs import get_reduced
-    ex = ModelExecutor(get_reduced("chatglm3-6b"), max_slots=4, max_len=256)
+    ex = ModelExecutor(get_reduced("chatglm3-6b"),
+                       ExecutorConfig(max_slots=4, max_len=256))
     alloc = BlockAllocator(num_pages=ex.allocator.num_pages, page_size=16)
     ex.bind_allocator(alloc)
     reqs = [_mk_req(20, 2), _mk_req(30, 2)]
@@ -311,7 +313,8 @@ def test_ragged_off_pins_table_at_cap_with_token_parity():
     specs = [(20, 3), (37, 2)]
     toks = {}
     for ragged in (True, False):
-        ex = ModelExecutor(cfg, max_slots=4, max_len=256, ragged=ragged)
+        ex = ModelExecutor(
+            cfg, ExecutorConfig(max_slots=4, max_len=256, ragged=ragged))
         start = _RID[0]
         toks[ragged] = _drive(ex, specs, 16, 999, 0)
         _RID[0] = start
@@ -337,9 +340,9 @@ def test_num_pages_override_decouples_kv_capacity():
     from repro.cache import OutOfPages
     from repro.configs import get_reduced
     cfg = get_reduced("chatglm3-6b")
-    ex_small = ModelExecutor(cfg, max_slots=2, max_len=64)
+    ex_small = ModelExecutor(cfg, ExecutorConfig(max_slots=2, max_len=64))
     assert ex_small.capacity_pages == 2 * 64 // 16          # 8
-    ex_big = ModelExecutor(cfg, max_slots=2, max_len=64, num_pages=48)
+    ex_big = ModelExecutor(cfg, ExecutorConfig(max_slots=2, max_len=64, num_pages=48))
     assert ex_big.capacity_pages == 48
     reqs = [_mk_req(60, 2) for _ in range(6)]               # 4 pages each
     with pytest.raises(OutOfPages):
@@ -373,7 +376,7 @@ def test_kernel_attn_impl_matches_gather_on_prefill():
     from repro.configs import get_reduced
     from repro.models import transformer as T
     cfg = get_reduced("chatglm3-6b")
-    ex = ModelExecutor(cfg, max_slots=2, max_len=64)
+    ex = ModelExecutor(cfg, ExecutorConfig(max_slots=2, max_len=64))
     alloc = BlockAllocator(num_pages=ex.allocator.num_pages, page_size=16)
     ex.bind_allocator(alloc)
     # fixed rids: prompt streams are rid-seeded, so the comparison must
@@ -421,7 +424,8 @@ def test_kernel_attn_impl_matches_gather_on_prefill():
 
 def test_unsupported_arch_falls_back_to_legacy():
     from repro.configs import get_reduced
-    ex = ModelExecutor(get_reduced("xlstm-125m"), max_slots=2, max_len=64)
+    ex = ModelExecutor(get_reduced("xlstm-125m"),
+                       ExecutorConfig(max_slots=2, max_len=64))
     assert ex.legacy and not ex.paged_ok    # SSM state keeps the slot store
 
 
@@ -458,7 +462,8 @@ def test_isolated_run_survives_full_page_pool():
     pool must clamp the measurement (and a *full* pool must fall back to
     the last measured per-token rate) instead of raising OutOfPages."""
     from repro.configs import get_reduced
-    ex = ModelExecutor(get_reduced("chatglm3-6b"), max_slots=2, max_len=64)
+    ex = ModelExecutor(get_reduced("chatglm3-6b"),
+                       ExecutorConfig(max_slots=2, max_len=64))
     page = ex.allocator.page_size
     # leave a single page free: the 60-token profile (4 pages) must clamp
     ex.allocator.allocate("hog", (ex.allocator.num_pages - 1) * page)

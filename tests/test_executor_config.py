@@ -1,0 +1,85 @@
+"""ExecutorConfig: the validated construction surface for ModelExecutor.
+
+Covers field validation, the single-point num_pages resolution (the
+constructor and ``build_stack`` previously each re-derived the slot-
+geometry default), and the one-release deprecation shim for the old
+bare-kwarg construction."""
+import pytest
+
+from repro.serving.executors import ExecutorConfig, ModelExecutor
+
+
+def _cfg():
+    from repro.configs import get_reduced
+    return get_reduced("chatglm3-6b")
+
+
+# ---------------- validation -------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(max_slots=0),
+    dict(max_len=0),
+    dict(page_size=0),
+    dict(num_pages=0),
+    dict(num_pages=-4),
+    dict(attn_impl="pallas"),
+])
+def test_invalid_fields_rejected_at_construction(bad):
+    with pytest.raises(ValueError):
+        ExecutorConfig(**bad)
+
+
+def test_unknown_field_rejected():
+    with pytest.raises(TypeError):
+        ExecutorConfig(pages=8)
+
+
+# ---------------- resolution -------------------------------------------------
+
+def test_resolved_fills_slot_geometry_default():
+    cfg = ExecutorConfig(max_slots=4, max_len=128, page_size=16)
+    assert cfg.num_pages is None
+    r = cfg.resolved()
+    assert r.num_pages == 4 * 128 // 16 == cfg.default_num_pages
+    # idempotent, and an explicit override is left alone
+    assert r.resolved() is r
+    assert ExecutorConfig(num_pages=7).resolved().num_pages == 7
+
+
+def test_executor_allocator_sized_by_resolved_config():
+    ex = ModelExecutor(_cfg(), ExecutorConfig(max_slots=2, max_len=64))
+    assert ex.capacity_pages == ex.config.num_pages == 2 * 64 // 16
+    assert ex.config.num_pages is not None   # executor holds the resolved cfg
+
+
+def test_build_stack_and_executor_agree_without_explicit_kv_pages():
+    """The dedup guarantee: with kv_pages unset, the engine's KV capacity
+    comes from the same ExecutorConfig.resolved() call that sized the
+    executor's stores — agreement by construction, not by parallel
+    derivation."""
+    from repro.launch.serve import build_stack
+    executor, _, engine_cfg, _, _ = build_stack("chatglm3-6b", "real")
+    assert engine_cfg.kv_pages == executor.capacity_pages
+    assert engine_cfg.kv_pages == executor.config.num_pages
+
+
+# ---------------- deprecation shim -------------------------------------------
+
+def test_bare_kwargs_still_work_with_deprecation_warning():
+    with pytest.warns(DeprecationWarning, match="ExecutorConfig"):
+        ex = ModelExecutor(_cfg(), max_slots=2, max_len=64, num_pages=24)
+    assert ex.max_slots == 2 and ex.max_len == 64
+    assert ex.capacity_pages == 24
+
+
+def test_config_path_emits_no_deprecation_warning():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ModelExecutor(_cfg(), ExecutorConfig(max_slots=2, max_len=64))
+
+
+def test_config_and_kwargs_together_rejected():
+    with pytest.raises(TypeError, match="not both"):
+        ModelExecutor(_cfg(), ExecutorConfig(max_slots=2, max_len=64),
+                      max_slots=4)

@@ -427,7 +427,7 @@ def test_real_executor_cow_page_copy_is_bit_exact():
     COW copy must emit exactly the tokens it would have emitted
     prefilling its whole prompt from scratch."""
     from repro.configs import get_reduced
-    from repro.serving.executors import ModelExecutor
+    from repro.serving.executors import ExecutorConfig, ModelExecutor
 
     def _mk(rid, prompt, out=4):
         return Request(rid=rid, modality=Modality.TEXT, arrival=0.0,
@@ -455,7 +455,7 @@ def test_real_executor_cow_page_copy_is_bit_exact():
     from repro.cache import BlockAllocator
     from repro.serving.request import State
     cfg = get_reduced("chatglm3-6b")
-    ex = ModelExecutor(cfg, max_slots=4, max_len=128)
+    ex = ModelExecutor(cfg, ExecutorConfig(max_slots=4, max_len=128))
     alloc = BlockAllocator(num_pages=ex.allocator.num_pages, page_size=16)
     ex.bind_allocator(alloc)
     donor = _mk("cowA", 40)
@@ -468,7 +468,7 @@ def test_real_executor_cow_page_copy_is_bit_exact():
     got_b = _drive(ex, alloc, dup, claim=(claimed, m.cow_src, cow_dst))
     alloc.check_invariants()
     # oracle: the same request prefilled from scratch on a fresh executor
-    ex2 = ModelExecutor(cfg, max_slots=4, max_len=128)
+    ex2 = ModelExecutor(cfg, ExecutorConfig(max_slots=4, max_len=128))
     alloc2 = BlockAllocator(num_pages=ex2.allocator.num_pages,
                             page_size=16)
     ex2.bind_allocator(alloc2)
@@ -484,8 +484,9 @@ def test_model_executor_content_streams_share_prefix_tokens():
     import zlib
 
     from repro.configs import get_reduced
-    from repro.serving.executors import ModelExecutor
-    ex = ModelExecutor(get_reduced("chatglm3-6b"), max_slots=2, max_len=64)
+    from repro.serving.executors import ExecutorConfig, ModelExecutor
+    ex = ModelExecutor(get_reduced("chatglm3-6b"),
+                       ExecutorConfig(max_slots=2, max_len=64))
     a = Request(rid="a", modality=Modality.TEXT, arrival=0.0,
                 text_tokens=40, prompt_tokens=40,
                 shared_prefix_id="s", shared_prefix_tokens=24)
