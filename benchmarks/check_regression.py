@@ -32,6 +32,15 @@ blocking it:
     pages/encoder-cache pin refs, failover loses/double-finishes
     nothing, and the installed-but-empty faults layer is a bit-exact
     no-op (sim timings and real emitted tokens).
+  * ``BENCH_slo.json`` — overload control. Exact, wall-clock-free
+    gates from a fresh fast sweep: zero leaks / exact terminal-state
+    partition under sustained overload (with and without chaos), the
+    modality-aware rejection order (rocks before pebbles before sand),
+    tenant token buckets never negative, tenant fairness, the
+    admission-on goodput plateau past the knee, and the installed
+    admission layer a bit-exact no-op under capacity. The sweep runs
+    simulated time, so "generous on wall-clock" is moot — every gate
+    is deterministic.
 
     PYTHONPATH=src python -m benchmarks.check_regression [--skip-wallclock]
 """
@@ -293,12 +302,48 @@ def check_faults_baseline(failures: list[str]) -> None:
                         "exercised (0 re-dispatches)")
 
 
+def check_slo_baseline(failures: list[str]) -> None:
+    path = ROOT / "BENCH_slo.json"
+    if not path.exists():
+        failures.append("BENCH_slo.json missing - run "
+                        "`python -m benchmarks.run --only slo_attainment`")
+        return
+    json.loads(path.read_text())  # baseline must at least parse
+    from benchmarks.slo_attainment import measure
+    fresh = measure(fast=True)
+    gates = fresh["gates"]
+    exact_zero = ["invariant_violations", "leaked_pages", "leaked_pins",
+                  "in_flight", "identity_rejections"]
+    for name in exact_zero:
+        got = gates[name]
+        status = "ok" if got == 0 else "REGRESSION"
+        print(f"  slo/{name}: {got}  [{status}]")
+        if status != "ok":
+            failures.append(f"slo/{name}: {got} != 0")
+    booleans = ["plateau_ok", "off_degrades", "rejection_order_ok",
+                "fairness_ok", "identity_ok"]
+    for name in booleans:
+        got = gates[name]
+        status = "ok" if got else "REGRESSION"
+        print(f"  slo/{name}: {got}  [{status}]")
+        if status != "ok":
+            failures.append(f"slo/{name} gate failed")
+    if gates["bucket_min_level"] < 0:
+        failures.append(f"slo/bucket_min_level: "
+                        f"{gates['bucket_min_level']} < 0 — a tenant "
+                        "token bucket went negative")
+    if gates["chaos_rejected"] <= 0 or gates["chaos_faulted"] <= 0:
+        failures.append("slo/chaos composition never exercised admission "
+                        "and faults together")
+
+
 def main(argv: list[str]) -> int:
     failures: list[str] = []
     print("== perf regression gate ==")
     check_encode_baseline(failures)
     check_prefix_baseline(failures)
     check_faults_baseline(failures)
+    check_slo_baseline(failures)
     check_executor_baseline(failures,
                             skip_wallclock="--skip-wallclock" in argv)
     if "--skip-wallclock" not in argv:

@@ -29,8 +29,8 @@ def main() -> None:
                    load_scaling,
                    memory_pressure, multi_replica, preemptions, prefix_cache,
                    priority_curves, real_executor, roofline,
-                   scheduler_overhead, slo_scales, ttft_breakdown,
-                   workload_mix, workloads_tcm)
+                   scheduler_overhead, slo_attainment, slo_scales,
+                   ttft_breakdown, workload_mix, workloads_tcm)
     common.SEED_OVERRIDE = args.seed
     benches = [
         ("scheduler_overhead", scheduler_overhead),
@@ -38,6 +38,7 @@ def main() -> None:
         ("real_executor", real_executor),
         ("prefix_cache", prefix_cache),
         ("fault_tolerance", fault_tolerance),
+        ("slo_attainment", slo_attainment),
         ("fig2_characterization", characterization),
         ("fig3_workload_mix", workload_mix),
         ("fig4_14_memory_pressure", memory_pressure),

@@ -93,13 +93,25 @@ class EngineConfig:
     max_encode_retries: int = 3
     max_step_retries: int = 3
     retry_backoff_s: float = 0.05
-    # graceful load shed: under *sustained* page pressure (admission
-    # blocked on pages for shed_after_iters consecutive iterations) shed
-    # waiting rocks first — trucks, then cars, never motorcycles — so
-    # sand keeps flowing (the paper's modality abstraction applied to
-    # overload). Off by default: fault-free runs stay bit-identical.
+    # graceful load shed under *sustained* page pressure (admission
+    # blocked on pages for shed_after_iters consecutive iterations):
+    # shed waiting rocks first — trucks, then cars, never motorcycles —
+    # so sand keeps flowing. Since ISSUE 8 this knob is a legacy alias:
+    # it maps onto the brownout ladder (admission.legacy_shed_config)
+    # with the shed stage only, reproducing the PR 6 cadence exactly.
+    # Off by default: fault-free runs stay bit-identical.
     load_shed: bool = False
     shed_after_iters: int = 40
+    # overload control (ISSUE 8): an AdmissionConfig installs the
+    # SLO-aware admission controller (per-tenant token buckets, bounded
+    # per-class queues, TTFT feasibility at ingest — refused requests go
+    # terminal REJECTED through the exactly-once release path); a
+    # BrownoutConfig tunes the graded-degradation ladder driven by
+    # sustained page pressure. ``admission`` alone arms the default
+    # ladder; both None (and load_shed off) = no overload control, the
+    # bit-identical historical path.
+    admission: object | None = None   # AdmissionConfig
+    brownout: object | None = None    # BrownoutConfig
 
 
 @dataclass
@@ -138,14 +150,26 @@ class Engine:
         self.iterations = 0
         # hardened lifecycle (ISSUE 6): deadline min-heap (lazy deletion;
         # empty when no request carries a finite deadline, so the sweep
-        # is O(1) on fault-free runs), encoder-cache pins held per rid,
-        # and the sustained-page-pressure counter behind load_shed
+        # is O(1) on fault-free runs), encoder-cache pins held per rid
         self._deadline_heap: list[tuple[float, int, Request]] = []
         self._deadline_seq = 0
         self._enc_pins: dict[str, str] = {}        # rid -> pinned mm_hash
-        self._pressure_streak = 0
         self._admit_blocked = False
         self.shed_count = 0
+        # overload control (ISSUE 8): admission controller + brownout
+        # ladder; the legacy load_shed knob maps onto a shed-only ladder
+        from repro.serving.admission import (AdmissionController,
+                                             BrownoutConfig, BrownoutLadder,
+                                             legacy_shed_config)
+        self.admission = (AdmissionController(self.config.admission)
+                          if self.config.admission is not None else None)
+        bcfg = self.config.brownout
+        if bcfg is None:
+            if self.config.admission is not None:
+                bcfg = BrownoutConfig()
+            elif self.config.load_shed:
+                bcfg = legacy_shed_config(self.config.shed_after_iters)
+        self.ladder = BrownoutLadder(bcfg) if bcfg is not None else None
         # decoupled encode stage: its own per-class queue manager; ordering
         # reuses the policy's WaitingIndex on the fast path
         self.encode_queues = QueueManager()
@@ -202,7 +226,7 @@ class Engine:
                     n_seen = self._prefix_seen.get(cid, 0) + 1
                     self._prefix_seen[cid] = n_seen
                     crossed |= n_seen == 2
-                if crossed:
+                if crossed and self._publish_ok():
                     # this arrival just made some prefix content popular:
                     # if its first carrier is still resident, publish that
                     # chain now so THIS request can already claim it
@@ -232,17 +256,26 @@ class Engine:
                     self.executor.isolated_e2e(req)
                 req.slo_from_engine = True
             # admission control: a request whose context can never fit the
-            # total KV capacity is rejected up front (vLLM errors out)
+            # total KV capacity is rejected up front (vLLM errors out);
+            # REJECTED rides the same exactly-once release path as every
+            # other terminal state (_abort is a no-op-safe superset here)
             need = req.prompt_tokens + req.output_tokens
             if self.allocator.pages_for_tokens(need) > \
                     self.allocator.num_pages:
-                req.state = State.REJECTED
-                self.rejected.append(req)
-                if hasattr(self.executor, "release_slot"):
-                    # drop the SLO-profiling state isolated_e2e cached
-                    # for a request that will never run
-                    self.executor.release_slot(req)
+                self._abort(req, State.REJECTED,
+                            f"CapacityExceeded: context of {need} tokens "
+                            f"exceeds total KV capacity")
                 continue
+            # SLO-aware admission (ISSUE 8): bounded queues, tenant
+            # budget, TTFT feasibility against current backlog — all
+            # deterministic from engine state, so a replay re-derives
+            # the identical rejection set. Runs before the deadline
+            # heap / encoder pin so a refused request holds nothing.
+            if self.admission is not None:
+                reason = self.admission.decide(req, self)
+                if reason is not None:
+                    self._abort(req, State.REJECTED, reason)
+                    continue
             # hardened lifecycle: plan-assigned deadline (absolute = rel
             # after arrival); caller-set deadlines are honored as-is
             if self.faults is not None and req.deadline == float("inf"):
@@ -297,12 +330,14 @@ class Engine:
             self.encoder_cache.unpin(h)
 
     def _abort(self, req: Request, state: State, error: str) -> bool:
-        """Move ``req`` to a terminal FAILED/CANCELLED state, releasing
-        every held resource exactly once: queue/membership indices, KV
-        pages (incl. shared prefix-cache refs and COW claims — the
-        allocator's ref counts make ``free`` safe for shared chains),
-        encoder-cache pins, and executor-side slots/state. Idempotent:
-        a second abort of a terminal request is a no-op.
+        """Move ``req`` to a terminal FAILED/CANCELLED/REJECTED state,
+        releasing every held resource exactly once: queue/membership
+        indices, KV pages (incl. shared prefix-cache refs and COW claims
+        — the allocator's ref counts make ``free`` safe for shared
+        chains), encoder-cache pins, and executor-side slots/state.
+        Idempotent: a second abort of a terminal request is a no-op.
+        Admission rejections arrive here *pre-enqueue* (state WAITING but
+        not yet queued), hence the membership check on queue removal.
 
         A cancelled/expired request whose prefill had completed still
         holds *valid* prompt KV — publish the chain first (like
@@ -312,7 +347,8 @@ class Engine:
             return False
         prev = req.state
         if prev in (State.WAITING, State.PREEMPTED):
-            self.queues.remove(req)
+            if req in self.queues.queues[req.vclass]:
+                self.queues.remove(req)
         elif prev is State.ENCODING:
             self.encode_queues.remove(req)
         elif prev is State.PREFILLING:
@@ -332,7 +368,8 @@ class Engine:
         if hasattr(self.executor, "release_slot"):
             self.executor.release_slot(req)
         self._unpin_encoder(req)
-        self.aborted.append(req)
+        (self.rejected if state is State.REJECTED
+         else self.aborted).append(req)
         return True
 
     def cancel(self, req: Request, reason: str = "client cancel") -> bool:
@@ -351,14 +388,14 @@ class Engine:
                 self._abort(req, State.CANCELLED,
                             f"deadline exceeded ({req.deadline:.3f}s)")
 
-    def _shed_for_pressure(self) -> None:
-        """Load shed under sustained page pressure: admission has been
-        blocked on pages for ``shed_after_iters`` consecutive iterations,
-        so drop the biggest waiting rock — trucks first, then cars,
-        *never* motorcycles — and keep the sand flowing (modality-aware
+    def _shed_for_pressure(self) -> bool:
+        """Shed stage of the brownout ladder (the absorbed PR 6 policy):
+        sustained page pressure climbed past every graded rung, so drop
+        the biggest waiting rock — trucks first, then cars, *never*
+        motorcycles — and keep the sand flowing (modality-aware
         degradation). Shedding waiting (not running) requests wastes no
-        completed work; the streak half-resets so shedding stays gradual
-        under continued pressure."""
+        completed work. Returns True when a victim was shed (the ladder
+        half-resets its streak then, so shedding stays gradual)."""
         for vclass in (VehicleClass.TRUCK, VehicleClass.CAR):
             q = self.queues.queues[vclass]
             if not len(q):
@@ -367,8 +404,8 @@ class Engine:
             self._abort(victim, State.FAILED,
                         "load shed: sustained page pressure")
             self.shed_count += 1
-            self._pressure_streak = self.config.shed_after_iters // 2
-            return
+            return True
+        return False
 
     # ------------------------------------------------------------------
     def _victims(self):
@@ -389,6 +426,14 @@ class Engine:
                 break
             total += n
         return total
+
+    def _publish_ok(self) -> bool:
+        """Brownout rung 3 (ISSUE 8): pause popularity-gated prefix
+        publication while the ladder holds this rung — index growth and
+        its eviction bookkeeping are pure speculation under pressure.
+        Preemption victims (and cancelled completed prefills) still
+        self-publish: that is preservation of paid-for work, not a bet."""
+        return self.ladder is None or not self.ladder.active("publication")
 
     def _retro_publish(self, head_cid: str) -> None:
         """Publish the still-resident first carrier of newly-popular
@@ -558,6 +603,19 @@ class Engine:
         work: list[tuple[Request, int]] = []
         if budget <= 0 or not len(self.encode_queues):
             return work
+        # brownout rung 1 (ISSUE 8): under sustained pressure, cap each
+        # truck's encode chunk — rocks still make progress, but can no
+        # longer monopolize the patch budget pebbles/sand are waiting on
+        truck_cap = None
+        if self.ladder is not None and self.ladder.active("encode"):
+            truck_cap = max(1, int(budget * self.ladder.cfg.encode_chunk_frac))
+
+        def _chunk(req: Request) -> int:
+            chunk = min(budget, req.mm_units - req.encoded_units)
+            if truck_cap is not None and req.vclass is VehicleClass.TRUCK:
+                chunk = min(chunk, truck_cap)
+            return chunk
+
         if self.config.legacy_scheduling:
             ordered = self.policy.order(
                 [r for r in self.encode_queues.peek_all()
@@ -565,7 +623,7 @@ class Engine:
             for req in ordered:
                 if budget <= 0:
                     break
-                chunk = min(budget, req.mm_units - req.encoded_units)
+                chunk = _chunk(req)
                 if chunk > 0:
                     work.append((req, chunk))
                     budget -= chunk
@@ -577,10 +635,9 @@ class Engine:
                 head = idx.next_candidate(self.now)
                 if head is None:
                     break
-                req = head[1]
-                chunk = min(budget, req.mm_units - req.encoded_units)
+                chunk = _chunk(head[1])
                 if chunk > 0:
-                    work.append((req, chunk))
+                    work.append((head[1], chunk))
                     budget -= chunk
         finally:
             idx.end_plan()
@@ -601,6 +658,11 @@ class Engine:
         if budget <= 0:
             return prefill_work
         policy, now, cap = self.policy, self.now, self.config.max_num_seqs
+        # brownout rung 2 (ISSUE 8): defer admitting *waiting* trucks
+        # while the ladder holds this rung — trucks already prefilling
+        # keep their pages and continue (no wasted work)
+        defer_trucks = (self.ladder is not None
+                        and self.ladder.active("defer_trucks"))
         pre = sorted((policy.rank(r, now), i, r)
                      for i, r in enumerate(self.prefilling))
         pi, npre = 0, len(pre)
@@ -612,6 +674,10 @@ class Engine:
                 if head is not None and (pi >= npre or
                                          head[0] < pre[pi][0]):
                     req = head[1]
+                    if defer_trucks and req.vclass is VehicleClass.TRUCK \
+                            and req not in self.prefilling:
+                        head = idx.next_candidate(now)
+                        continue
                     if len(self.running) + len(self.prefilling) >= cap:
                         # no later waiting candidate can admit either; the
                         # seed scanned and skipped them all (side-effect
@@ -646,6 +712,8 @@ class Engine:
         (the host-overhead baseline the incremental path is measured
         against; decisions are identical)."""
         prefill_work: list[tuple[Request, int]] = []
+        defer_trucks = (self.ladder is not None
+                        and self.ladder.active("defer_trucks"))
         candidates = self.policy.order(
             list(self.prefilling) +
             [r for r in self.queues.peek_all() if r.ready_at <= self.now],
@@ -654,6 +722,8 @@ class Engine:
             if budget <= 0:
                 break
             if req not in self.prefilling:
+                if defer_trucks and req.vclass is VehicleClass.TRUCK:
+                    continue
                 if len(self.running) + len(self.prefilling) >= \
                         self.config.max_num_seqs:
                     continue
@@ -722,13 +792,14 @@ class Engine:
 
         self._admit_blocked = False
         prefill_work, decode_batch, encode_work = self._plan()
-        if self.config.load_shed:
-            if self._admit_blocked:
-                self._pressure_streak += 1
-                if self._pressure_streak >= self.config.shed_after_iters:
-                    self._shed_for_pressure()
-            else:
-                self._pressure_streak = 0
+        if self.ladder is not None:
+            # one degradation ladder (ISSUE 8): graded rungs first
+            # (encode shrink / truck deferral / publication tightening
+            # are applied inside the planners via ladder.active), shed
+            # only at the top — with hysteresis on the way down
+            if self.ladder.observe(self._admit_blocked) and \
+                    self._shed_for_pressure():
+                self.ladder.shed_fired()
         if not (prefill_work or decode_batch or encode_work) \
                 and (len(self.queues) or len(self.encode_queues)):
             # everything is waiting on async preprocess: jump ahead
@@ -812,7 +883,8 @@ class Engine:
                             "client cancel (prefilling)")
                 continue
             req.prefilled += chunk
-            if self.prefix_on and req.prefilled < req.prompt_tokens:
+            if self.prefix_on and req.prefilled < req.prompt_tokens \
+                    and self._publish_ok():
                 # progressive in-flight publication: pages this chunk
                 # completed are final KV — publishing popular content as
                 # it lands lets a duplicate admitted mid-prefill already
@@ -840,7 +912,8 @@ class Engine:
                     chunks = req.content_chunks()
                     if chunks and "!" not in chunks[0][0]:
                         self._cid_resident[chunks[0][0]] = req
-                    popular = self._popular_tokens(chunks)
+                    popular = (self._popular_tokens(chunks)
+                               if self._publish_ok() else 0)
                     if popular > 0:
                         self.allocator.publish_prefix(req.rid, chunks,
                                                       max_tokens=popular)
@@ -899,6 +972,19 @@ class Engine:
         uses this to detect quiescent replicas)."""
         return not (self.running or self.prefilling or len(self.queues)
                     or len(self.encode_queues))
+
+    def overload_state(self) -> dict:
+        """Per-replica overload snapshot (ISSUE 8): the router's
+        pressure-aware placement and the SLO benchmark report read this —
+        and the fleet-scale open item will route on it."""
+        return {
+            "brownout_level": self.ladder.level if self.ladder else 0,
+            "shed": self.shed_count,
+            "rejected": len(self.rejected),
+            "admission": (self.admission.describe()
+                          if self.admission is not None else None),
+            "queued": len(self.queues) + len(self.encode_queues),
+        }
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request], max_iters: int = 2_000_000):

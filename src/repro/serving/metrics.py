@@ -38,25 +38,41 @@ def _group(reqs: list[Request], g: str) -> list[Request]:
 
 def summarize(reqs: list[Request]) -> dict:
     """Per-class + overall: TTFT, normalized latency, SLO violation rate &
-    severity, preemption counts/time (paper Figs. 3/8/10/11...)."""
+    severity, preemption counts/time (paper Figs. 3/8/10/11...).
+
+    Latency statistics (TTFT / norm latency / SLO violation) are computed
+    over COMPLETED requests only (ISSUE 8): a rejected or failed request
+    has no meaningful latency, and folding its partial timestamps into
+    percentiles skews them.  Non-completed outcomes are reported as
+    separate counts instead, so overload runs stay honest — a policy
+    cannot 'improve' its p90 by rejecting its slowest class."""
     out = {}
     for g in GROUPS:
         rs = _group(reqs, g)
         if not rs:
             out[g] = None
             continue
-        ttft = np.array([r.ttft() for r in rs if r.ttft() is not None])
-        norm = np.array([r.norm_latency() for r in rs
+        done = [r for r in rs if r.state is State.FINISHED]
+        ttft = np.array([r.ttft() for r in done if r.ttft() is not None])
+        norm = np.array([r.norm_latency() for r in done
                          if r.norm_latency() is not None])
-        viol = np.array([r.slo_violated() for r in rs])
-        sev = np.array([r.violation_severity() for r in rs if r.slo_violated()])
-        mm = [r for r in rs if r.mm_units > 0]
+        viol = np.array([r.slo_violated() for r in done])
+        sev = np.array([r.violation_severity() for r in done
+                        if r.slo_violated()])
+        mm = [r for r in done if r.mm_units > 0]
         enc_waits = [bd["encode_wait"] for r in mm
                      if (bd := r.ttft_breakdown()) is not None]
         out[g] = {
             "n": len(rs),
+            "finished": len(done),
+            "rejected": sum(r.state is State.REJECTED for r in rs),
+            "failed": sum(r.state is State.FAILED for r in rs),
+            "cancelled": sum(r.state is State.CANCELLED for r in rs),
+            "shed": sum(1 for r in rs if r.error is not None
+                        and r.error.startswith("load shed")),
             "ttft_avg": float(ttft.mean()) if len(ttft) else float("nan"),
             "ttft_p90": float(np.percentile(ttft, 90)) if len(ttft) else float("nan"),
+            "ttft_p99": float(np.percentile(ttft, 99)) if len(ttft) else float("nan"),
             "norm_latency_avg": float(norm.mean()) if len(norm) else float("nan"),
             "slo_violation_rate": float(viol.mean()) if len(viol) else 0.0,
             "violation_severity_avg": float(sev.mean()) if len(sev) else 0.0,
@@ -74,6 +90,70 @@ def summarize(reqs: list[Request]) -> dict:
                                 / len(rs)),
         }
     return out
+
+
+def summarize_tenants(reqs: list[Request],
+                      duration: float | None = None) -> dict:
+    """Per-tenant goodput / rejection / attainment counters (ISSUE 8).
+
+    The fairness check the benchmark gates on: under overload no tenant
+    may be fully starved (zero served) at a vehicle class where another
+    tenant is being served — modality-aware rejection must discriminate
+    by *class*, never by client identity."""
+    tenants = sorted({r.tenant for r in reqs})
+    if duration is None and reqs:
+        t0 = min(r.arrival for r in reqs)
+        t1 = max((r.finish_time for r in reqs
+                  if r.finish_time is not None), default=t0)
+        duration = max(t1 - t0, 1e-9)
+    out = {}
+    for t in tenants:
+        rs = [r for r in reqs if r.tenant == t]
+        done = [r for r in rs if r.state is State.FINISHED]
+        ok = [r for r in done if not r.slo_violated()]
+        served_by_class = {g: sum(1 for r in done if r.vclass is not None
+                                  and r.vclass.value == g)
+                           for g in GROUPS[:3]}
+        rejected_by_class = {g: sum(1 for r in rs
+                                    if r.state is State.REJECTED
+                                    and r.vclass is not None
+                                    and r.vclass.value == g)
+                             for g in GROUPS[:3]}
+        out[t] = {
+            "n": len(rs),
+            "finished": len(done),
+            "rejected": sum(r.state is State.REJECTED for r in rs),
+            "slo_attainment": (len(ok) / len(rs)) if rs else 0.0,
+            "goodput": len(ok) / duration if duration else 0.0,
+            "served_by_class": served_by_class,
+            "rejected_by_class": rejected_by_class,
+        }
+    return out
+
+
+def rejection_mix(reqs: list[Request]) -> dict:
+    """Rejected-request fractions by vehicle class: of all offered
+    requests in a class, what share was refused at admission.  The
+    benchmark asserts the modality-aware order — trucks refused at the
+    highest rate, motorcycles at the lowest."""
+    out = {}
+    for g in GROUPS[:3]:
+        rs = [r for r in reqs if r.vclass is not None and r.vclass.value == g]
+        rej = sum(r.state is State.REJECTED for r in rs)
+        out[g] = {"offered": len(rs), "rejected": rej,
+                  "rate": rej / len(rs) if rs else 0.0}
+    return out
+
+
+def slo_attainment(reqs: list[Request]) -> float:
+    """Fraction of ALL offered requests that finished within their SLO —
+    rejections and failures count against attainment (the closed-loop
+    quantity ROADMAP open item 3 asks for)."""
+    if not reqs:
+        return 0.0
+    ok = sum(1 for r in reqs
+             if r.state is State.FINISHED and not r.slo_violated())
+    return ok / len(reqs)
 
 
 def ttft_components(reqs: list[Request]) -> dict[str, float] | None:

@@ -30,7 +30,9 @@ class State(str, enum.Enum):
     RUNNING = "running"         # decoding
     PREEMPTED = "preempted"
     FINISHED = "finished"
-    REJECTED = "rejected"       # admission control: exceeds total KV capacity
+    REJECTED = "rejected"       # admission control: infeasible SLO, tenant
+    #                             budget, bounded queue, or a context that
+    #                             exceeds total KV capacity (see .error)
     FAILED = "failed"           # terminal: fault/capacity/shed (see .error)
     CANCELLED = "cancelled"     # terminal: client cancel / deadline expiry
 
@@ -57,6 +59,10 @@ class Request:        # engine's running/prefilling sets (rids are unique)
     # content, so equal ids => equal tokens (KV prefix-cache key)
     shared_prefix_id: str | None = None
     shared_prefix_tokens: int = 0   # leading text tokens drawn from that id
+    # multi-tenant client pool (ISSUE 8): the admission controller's
+    # token buckets and the fairness metrics key on this; survives
+    # redispatch (the client does not change when a replica dies)
+    tenant: str = "default"
 
     # ---- derived / filled by the pipeline ----
     prompt_tokens: int = 0     # total LLM prompt tokens (text + mm embeds)

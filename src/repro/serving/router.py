@@ -13,6 +13,12 @@ The router assigns requests at arrival:
   * prefix-aware     — place where the replica's KV prefix cache already
     holds the longest match for the request's content (tie: least load),
     so duplicate rocks land where their pages are (ISSUE 6).
+  * pressure-aware   — overload-control routing (ISSUE 8): prefer the
+    replica lowest on its brownout ladder (see serving/admission.py),
+    breaking ties by outstanding load — arrivals drain away from
+    replicas that are browning out before their admission controllers
+    start rejecting, the fleet-scale hook the ROADMAP's open item
+    anticipates.
 
 Failover (ISSUE 6 tentpole): ``run_stepped`` co-simulates every replica
 on one timeline, applies whole-replica crashes from the fault plan's
@@ -89,6 +95,14 @@ class Router:
             return i
         if self.routing == "prefix-aware":
             i = self._prefix_target(req)
+            self._load[i] += est_prefill
+            return i
+        if self.routing == "pressure-aware":
+            pool = [j for j in range(n) if self.alive[j]] or list(range(n))
+            i = min(pool, key=lambda j: (
+                self.engines[j].ladder.level
+                if self.engines[j].ladder is not None else 0,
+                self._load[j]))
             self._load[i] += est_prefill
             return i
         raise ValueError(self.routing)

@@ -61,6 +61,85 @@ class WorkloadConfig:
     shared_prefix_pool: int = 4
     shared_prefix_tokens_min: int = 64
     shared_prefix_tokens_max: int = 256
+    # ---- trace-shaped generation (ISSUE 8, ServeGen-style) ----
+    # All knobs default off and draw from a SEPARATE RNG stream, so the
+    # base stream's draws — and every committed BENCH_*.json baseline —
+    # stay byte-identical while the knobs are at their defaults.
+    # Heavy-tailed lengths: with this probability a request's text /
+    # output length is redrawn from a Pareto tail instead of the
+    # lognormal body (production prompt-length CCDFs are power-law)
+    heavy_tail_prob: float = 0.0
+    heavy_tail_alpha: float = 1.6
+    heavy_tail_text_cap: int = 32768
+    heavy_tail_out_cap: int = 4096
+    # Diurnal rate curve: rate(t) = rate * (1 + A*sin(2*pi*t/period)),
+    # applied by rescaling the base stream's exponential gaps
+    diurnal_amplitude: float = 0.0
+    diurnal_period_s: float = 600.0
+    # Burst windows: with this probability (checked per arrival outside
+    # a burst) a burst starts, multiplying the rate by burst_factor for
+    # burst_len_s seconds
+    burst_prob: float = 0.0
+    burst_factor: float = 4.0
+    burst_len_s: float = 5.0
+    # Multi-tenant client pool: > 0 assigns each request to one of N
+    # tenants with zipf-skewed popularity; each tenant has a distinct
+    # modality mix (interpolated text-heavy -> video-heavy around the
+    # base mix) and its own shared system prompt (feeding the KV prefix
+    # cache realistically). 0 = single "default" tenant.
+    tenants: int = 0
+    tenant_zipf_a: float = 1.2
+    tenant_sys_prob: float = 0.75
+    tenant_sys_tokens_min: int = 64
+    tenant_sys_tokens_max: int = 256
+
+
+def _shape_arrivals(cfg: WorkloadConfig, gaps: np.ndarray,
+                    trng: np.random.Generator) -> np.ndarray:
+    """Diurnal + burst arrival shaping: the base stream's exponential
+    gaps are *rescaled* by the instantaneous rate multiplier (a thinned
+    inhomogeneous Poisson process), so the base RNG stream is untouched
+    — only burst starts draw from the trace RNG."""
+    t = 0.0
+    burst_until = -1.0
+    shaped = np.empty(len(gaps))
+    for i, g in enumerate(gaps):
+        mult = 1.0
+        if cfg.diurnal_amplitude > 0:
+            mult *= max(0.05, 1.0 + cfg.diurnal_amplitude *
+                        np.sin(2.0 * np.pi * t / cfg.diurnal_period_s))
+        if t < burst_until:
+            mult *= cfg.burst_factor
+        t += g / mult
+        shaped[i] = t
+        if cfg.burst_prob > 0 and t >= burst_until and \
+                trng.uniform() < cfg.burst_prob:
+            burst_until = t + cfg.burst_len_s
+    return shaped
+
+
+def _tenant_pool(cfg: WorkloadConfig, mix: dict,
+                 trng: np.random.Generator | None):
+    """(tenant specs, zipf popularity) for the multi-tenant client pool.
+    Each tenant's modality mix interpolates between a text-heavy and a
+    video-heavy lean blended with the base mix — distinct but related
+    clients, per ServeGen — and carries one shared system prompt."""
+    if cfg.tenants <= 0:
+        return [], None
+    base = np.array([mix["text"], mix["image"], mix["video"]])
+    specs = []
+    for k in range(cfg.tenants):
+        f = k / max(1, cfg.tenants - 1)
+        lean = (np.array([0.90, 0.08, 0.02]) * (1 - f)
+                + np.array([0.25, 0.25, 0.50]) * f)
+        w = 0.5 * base + 0.5 * lean
+        w = w / w.sum()
+        sys_toks = int(trng.integers(cfg.tenant_sys_tokens_min,
+                                     cfg.tenant_sys_tokens_max + 1))
+        specs.append((f"tenant{k}", w, f"t{cfg.seed}-{k}", sys_toks))
+    ranks = np.arange(1, cfg.tenants + 1, dtype=float)
+    pop = ranks ** -cfg.tenant_zipf_a
+    return specs, pop / pop.sum()
 
 
 def generate(cfg: WorkloadConfig) -> list[Request]:
@@ -71,6 +150,16 @@ def generate(cfg: WorkloadConfig) -> list[Request]:
         p=[mix["text"], mix["image"], mix["video"]])
     gaps = rng.exponential(1.0 / cfg.rate, size=cfg.num_requests)
     arrivals = np.cumsum(gaps)
+
+    # trace-shaped extras (ISSUE 8) live on a separate RNG stream: with
+    # every knob at its default this block draws nothing and the base
+    # stream stays byte-identical to the historical generator
+    trace_on = (cfg.heavy_tail_prob > 0 or cfg.diurnal_amplitude > 0
+                or cfg.burst_prob > 0 or cfg.tenants > 0)
+    trng = np.random.default_rng(cfg.seed + 0x7ACE) if trace_on else None
+    if cfg.diurnal_amplitude > 0 or cfg.burst_prob > 0:
+        arrivals = _shape_arrivals(cfg, gaps, trng)
+    tenant_specs, tenant_pop = _tenant_pool(cfg, mix, trng)
 
     reqs = []
     # previously-generated mm contents per modality: (hash, units) pools
@@ -89,19 +178,34 @@ def generate(cfg: WorkloadConfig) -> list[Request]:
                                cfg.shared_prefix_tokens_max + 1)))
             for j in range(cfg.shared_prefix_pool)]
     for i, (mod, t) in enumerate(zip(modalities, arrivals)):
+        tenant = "default"
+        shared_id, shared_toks = None, 0
+        if tenant_specs:
+            k = int(trng.choice(len(tenant_specs), p=tenant_pop))
+            tenant, tmix, sys_id, sys_toks = tenant_specs[k]
+            # tenants have distinct modality mixes: redraw from this
+            # tenant's lean (the base draw above is discarded)
+            mod = str(trng.choice(["text", "image", "video"], p=tmix))
+            if trng.uniform() < cfg.tenant_sys_prob:
+                shared_id, shared_toks = sys_id, sys_toks
         out_toks = int(np.clip(rng.lognormal(
             cfg.out_tokens_log_mu, cfg.out_tokens_log_sigma), 4, 1024))
+        if cfg.heavy_tail_prob > 0 and trng.uniform() < cfg.heavy_tail_prob:
+            out_toks = min(cfg.heavy_tail_out_cap,
+                           int(32 * (1 + trng.pareto(cfg.heavy_tail_alpha))))
         mm_hash = None
-        shared_id, shared_toks = None, 0
         if mod == "text":
             text = int(np.clip(rng.lognormal(
                 cfg.text_tokens_log_mu, cfg.text_tokens_log_sigma), 10, 10000))
             mm = 0
-            if sys_pool and rng.uniform() < cfg.shared_prefix_prob:
+            if cfg.heavy_tail_prob > 0 and \
+                    trng.uniform() < cfg.heavy_tail_prob:
+                text = min(cfg.heavy_tail_text_cap,
+                           int(200 * (1 + trng.pareto(cfg.heavy_tail_alpha))))
+            if shared_id is None and sys_pool and \
+                    rng.uniform() < cfg.shared_prefix_prob:
                 shared_id, shared_toks = \
                     sys_pool[int(rng.integers(len(sys_pool)))]
-                text += shared_toks   # the system prompt precedes the
-                #                       question in the prompt layout
         else:
             text = int(np.clip(rng.lognormal(3.6, 0.6), 8, 256))
             if cfg.duplicate_prob > 0 and pools[mod] and \
@@ -118,11 +222,15 @@ def generate(cfg: WorkloadConfig) -> list[Request]:
                     mm = frames * cfg.video_patches_per_frame
                 mm_hash = f"{mod}-{i:05d}"
                 pools[mod].append((mm_hash, mm))
+        if shared_id is not None:
+            text += shared_toks   # the system prompt precedes the
+            #                       question in the prompt layout
         reqs.append(Request(
             rid=f"r{i:05d}", modality=Modality(mod), arrival=float(t),
             text_tokens=text, mm_units=mm, output_tokens=out_toks,
             prompt_tokens=text + mm, mm_hash=mm_hash,
-            shared_prefix_id=shared_id, shared_prefix_tokens=shared_toks))
+            shared_prefix_id=shared_id, shared_prefix_tokens=shared_toks,
+            tenant=tenant))
     return reqs
 
 

@@ -1,0 +1,419 @@
+"""Overload control (ISSUE 8): SLO-aware admission, the brownout
+ladder, trace-shaped workloads, and completed-only latency metrics.
+
+The central properties: admission decisions are deterministic and
+modality-aware (rocks refused first, sand last); the ladder cannot
+oscillate at a fixed boundary load; an installed admission layer is a
+bit-exact no-op under capacity; and ANY overload schedule composed with
+ANY fault schedule leaves zero leaks, non-negative token buckets, and
+every request in exactly one terminal state."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import sim_stack_cached
+from repro.core.scheduler import make_policy
+from repro.serving.admission import (AdmissionConfig, AdmissionController,
+                                     BrownoutConfig, BrownoutLadder,
+                                     TenantBudget, TokenBucket,
+                                     legacy_shed_config)
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor, make_cost_model
+from repro.serving.faults import FaultPlan, FaultRates
+from repro.serving.metrics import (lifecycle_counts, rejection_mix,
+                                   summarize, summarize_tenants)
+from repro.serving.request import Modality, Request, State, VehicleClass
+from repro.serving.workload import WorkloadConfig, generate
+
+POLICY = "tcm"
+
+
+def _engine(plan=None, **cfg_kw):
+    _ex, classifier, _cfg, _prof, _est = sim_stack_cached()
+    cfg_kw.setdefault("kv_pages", 2048)
+    cfg_kw.setdefault("token_budget", 512)
+    return Engine(make_policy(POLICY), SimExecutor(make_cost_model(
+        "llava-7b")), classifier, EngineConfig(**cfg_kw), faults=plan)
+
+
+def _wl(n=40, seed=0, **kw):
+    kw.setdefault("rate", 3.0)
+    return generate(WorkloadConfig(mix="MH", num_requests=n,
+                                   seed=seed, **kw))
+
+
+def _classified(eng, rid, modality, text, mm, slo=None):
+    req = Request(rid=rid, modality=modality, arrival=eng.now,
+                  text_tokens=text, mm_units=mm, prompt_tokens=text + mm)
+    vclass, est_prefill, est_kv = eng.classifier.classify(
+        modality.value, text, mm)
+    req.vclass = vclass
+    req.est_prefill = est_prefill
+    req.est_kv_tokens = est_kv
+    req.slo = (slo if slo is not None
+               else eng.config.slo_scale * eng.executor.isolated_e2e(req))
+    return req
+
+
+def _assert_clean(eng, reqs):
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0
+    if eng.encoder_cache is not None:
+        stats = eng.encoder_cache.stats()
+        assert stats["pin_refs"] == 0 and stats["pinned"] == 0
+    assert eng._enc_pins == {}
+    counts = lifecycle_counts(reqs)
+    assert counts["in_flight"] == 0
+    assert (counts["finished"] + counts["rejected"] + counts["failed"]
+            + counts["cancelled"]) == len(reqs)
+    done = {r.rid for r in eng.finished}
+    assert len(done) == len(eng.finished)
+    assert done.isdisjoint(r.rid for r in eng.aborted)
+    assert done.isdisjoint(r.rid for r in eng.rejected)
+
+
+# ---------------- token buckets ---------------------------------------------
+
+
+def test_token_bucket_never_negative():
+    b = TokenBucket(TenantBudget(rate=10.0, burst=100.0), now=0.0)
+    assert b.take(60.0, 0.0)
+    assert not b.take(50.0, 0.0)     # 40 left: refused whole, not debited
+    assert b.level == 40.0
+    assert b.take(40.0, 0.0)
+    assert b.level == 0.0
+    assert b.min_level == 0.0
+    # refill at 10 tok/s; clock moves forward only
+    assert not b.take(25.0, 2.0)     # 20 refilled: still short
+    assert b.take(25.0, 3.0)         # 30 >= 25 after one more second
+    assert b.min_level >= 0.0
+
+
+def test_token_bucket_caps_at_burst_and_infinite_is_free():
+    b = TokenBucket(TenantBudget(rate=1000.0, burst=50.0), now=0.0)
+    b.refill(1e9)
+    assert b.level == 50.0           # capped at burst
+    inf = TokenBucket(TenantBudget(), now=0.0)
+    assert inf.take(1e18, 0.0) and inf.min_level == float("inf")
+
+
+def test_controller_lazy_buckets_and_min_level():
+    ctl = AdmissionController(AdmissionConfig(
+        tenant_budgets={"a": TenantBudget(rate=1.0, burst=10.0)}))
+    assert ctl.min_bucket_level() == float("inf")   # no bucket yet
+    assert ctl.bucket_for("a", 0.0).take(9.0, 0.0)
+    assert ctl.min_bucket_level() == 1.0
+    assert ctl.bucket_for("b", 0.0).take(1e9, 0.0)  # default: infinite
+
+
+# ---------------- admission feasibility -------------------------------------
+
+
+def test_predict_ttft_backlog_is_class_aware():
+    """A motorcycle only waits behind other motorcycles; a truck waits
+    behind everything — queued rocks must not count against sand."""
+    eng = _engine(None, admission=AdmissionConfig())
+    moto = _classified(eng, "m", Modality.TEXT, 64, 0)
+    truck = _classified(eng, "t", Modality.VIDEO, 64, 12000)
+    assert moto.vclass is VehicleClass.MOTORCYCLE
+    assert truck.vclass is VehicleClass.TRUCK
+    base_m = eng.admission.predict_ttft(moto, eng)
+    base_t = eng.admission.predict_ttft(truck, eng)
+    # park a big rock in the waiting queue: only the truck's prediction
+    # may move
+    parked = _classified(eng, "parked", Modality.VIDEO, 64, 12000)
+    eng.queues.push(parked, eng.now)
+    assert eng.admission.predict_ttft(moto, eng) == base_m
+    assert eng.admission.predict_ttft(truck, eng) > base_t
+    # a parked motorcycle delays both (it runs ahead of everything)
+    parked_m = _classified(eng, "pm", Modality.TEXT, 64, 0)
+    eng.queues.push(parked_m, eng.now)
+    assert eng.admission.predict_ttft(moto, eng) > base_m
+
+
+def test_feasibility_rejects_backlogged_truck_admits_moto():
+    eng = _engine(None, admission=AdmissionConfig())
+    # queue enough rock-seconds that a new truck cannot meet its SLO
+    for i in range(12):
+        eng.queues.push(
+            _classified(eng, f"bk{i}", Modality.VIDEO, 64, 12000), eng.now)
+    truck = _classified(eng, "t", Modality.VIDEO, 64, 12000)
+    moto = _classified(eng, "m", Modality.TEXT, 64, 0)
+    reason = eng.admission.decide(truck, eng)
+    assert reason is not None and "SLO infeasible" in reason
+    assert eng.admission.decide(moto, eng) is None
+    assert eng.admission.rejections and eng.admission.admitted == 1
+
+
+def test_queue_depth_bound_and_decision_order():
+    """A zero-depth truck queue rejects structurally — before the
+    feasibility model runs and before the tenant bucket is debited."""
+    cfg = AdmissionConfig(
+        max_queue_depth={VehicleClass.TRUCK: 0},
+        tenant_budgets={"default": TenantBudget(rate=0.0, burst=100.0)})
+    eng = _engine(None, admission=cfg)
+    truck = _classified(eng, "t", Modality.VIDEO, 64, 12000)
+    reason = eng.admission.decide(truck, eng)
+    assert reason is not None and "queue full" in reason
+    assert not eng.admission.buckets     # bucket never touched
+    # the bucket is consulted last: an admissible moto drains it...
+    moto = _classified(eng, "m", Modality.TEXT, 64, 0)
+    assert eng.admission.decide(moto, eng) is None
+    # ...and once empty, the next moto is refused on budget
+    moto2 = _classified(eng, "m2", Modality.TEXT, 64, 0)
+    reason = eng.admission.decide(moto2, eng)
+    assert reason is not None and "budget exhausted" in reason
+    assert eng.admission.min_bucket_level() >= 0.0
+
+
+def test_rejected_is_terminal_and_distinct_in_metrics():
+    """REJECTED rides the exactly-once release path and is counted apart
+    from FAILED/CANCELLED."""
+    eng = _engine(None, admission=AdmissionConfig(
+        max_queue_depth={VehicleClass.TRUCK: 0}))
+    reqs = _wl(30, seed=2, rate=50.0)
+    eng.run(reqs)
+    rej = [r for r in reqs if r.state is State.REJECTED]
+    assert rej and all(r in eng.rejected for r in rej)
+    assert all(r.aborted_at is not None and r.finish_time is None
+               for r in rej)
+    counts = lifecycle_counts(reqs)
+    assert counts["rejected"] == len(rej)
+    assert counts["failed"] == counts["cancelled"] == 0
+    _assert_clean(eng, reqs)
+
+
+def test_overload_rejection_is_modality_ordered():
+    """Sustained overload refuses rocks at the highest rate and sand at
+    the lowest (the benchmark gates the same order at scale)."""
+    eng = _engine(None, admission=AdmissionConfig())
+    reqs = _wl(120, seed=3, rate=30.0)
+    eng.run(reqs)
+    mix = rejection_mix(reqs)
+    assert mix["truck"]["rejected"] > 0
+    assert mix["truck"]["rate"] >= mix["car"]["rate"] \
+        >= mix["motorcycle"]["rate"]
+    _assert_clean(eng, reqs)
+
+
+def test_admission_installed_is_noop_under_capacity():
+    """Permissive defaults: under capacity the layer admits everything
+    and the run is bit-identical to no layer at all."""
+    def run(admission):
+        eng = _engine(None, kv_pages=4096, admission=admission)
+        reqs = _wl(60, seed=4, rate=1.0)
+        eng.run(reqs)
+        assert all(r.state is not State.REJECTED for r in reqs)
+        return {r.rid: (r.state.value, r.finish_time, r.first_token_time,
+                        r.decoded, r.preemptions) for r in reqs}
+    assert run(AdmissionConfig()) == run(None)
+
+
+# ---------------- brownout ladder -------------------------------------------
+
+
+def test_ladder_climbs_rungs_in_order_then_sheds():
+    lad = BrownoutLadder(BrownoutConfig(step_iters=3, cooldown_iters=5))
+    names = ["encode", "defer_trucks", "publication"]
+    for lvl, name in enumerate(names):
+        assert not lad.active(name)
+        for _ in range(3):
+            assert lad.observe(True) is False
+        assert lad.level == lvl + 1 and lad.active(name)
+    # at the top: the next step_iters of pressure request a shed
+    assert [lad.observe(True) for _ in range(3)] == [False, False, True]
+    lad.shed_fired()                     # half-reset: sheds every 2 now
+    assert [lad.observe(True) for _ in range(2)] == [False, True]
+
+
+def test_ladder_descends_only_after_cooldown():
+    lad = BrownoutLadder(BrownoutConfig(step_iters=2, cooldown_iters=4))
+    for _ in range(4):
+        lad.observe(True)
+    assert lad.level == 2
+    for _ in range(3):
+        lad.observe(False)
+    assert lad.level == 2                # cooldown not yet met
+    lad.observe(False)
+    assert lad.level == 1                # one rung per full cooldown
+    for _ in range(4):
+        lad.observe(False)
+    assert lad.level == 0
+
+
+def test_ladder_no_oscillation_at_boundary_load():
+    """Alternating pressure/clean at a fixed boundary load must not
+    oscillate: climbing needs a pressure *streak*, descending a clean
+    streak, and strict alternation provides neither."""
+    lad = BrownoutLadder(BrownoutConfig(step_iters=4, cooldown_iters=8))
+    for _ in range(4):
+        lad.observe(True)
+    assert lad.level == 1 and lad.transitions == 1
+    for i in range(200):
+        assert lad.observe(bool(i % 2)) is False
+    assert lad.level == 1 and lad.transitions == 1
+
+
+def test_legacy_shed_config_matches_pr6_cadence():
+    """load_shed's absorbed mapping: shed at N sustained-pressure
+    iterations, half-reset after a confirmed shed, full reset on any
+    clean iteration, and no graded rungs ever engage."""
+    lad = BrownoutLadder(legacy_shed_config(6))
+    assert [lad.observe(True) for _ in range(6)] == [False] * 5 + [True]
+    assert lad.observe(True) is True     # unconfirmed: retries at once
+    lad.shed_fired()
+    assert [lad.observe(True) for _ in range(3)] == [False, False, True]
+    lad.observe(False)                   # clean: full reset
+    assert [lad.observe(True) for _ in range(6)] == [False] * 5 + [True]
+    assert lad.level == 0 and not any(
+        lad.active(r) for r in ("encode", "defer_trucks", "publication"))
+
+
+def test_engine_brownout_engages_before_shedding():
+    """Under page pressure with a graded ladder, rung degradations fire
+    (transitions observed) and service continues — sheds only at the
+    top."""
+    eng = _engine(None, kv_pages=700, max_num_seqs=128,
+                  admission=AdmissionConfig(slo_feasibility=False,
+                                            max_queue_depth=None),
+                  brownout=BrownoutConfig(step_iters=3, cooldown_iters=6))
+    reqs = _wl(60, seed=8, rate=50.0)
+    eng.run(reqs)
+    assert eng.ladder.transitions > 0
+    if eng.shed_count:                   # sheds stay modality-aware
+        shed = [r for r in reqs if r.error is not None
+                and r.error.startswith("load shed")]
+        assert all(r.vclass is not VehicleClass.MOTORCYCLE for r in shed)
+    _assert_clean(eng, reqs)
+
+
+# ---------------- metrics: completed-only percentiles (satellite) ------------
+
+
+def _mk(rid, state, vclass, ttft=None, finish=None, tenant="default",
+        out=8):
+    r = Request(rid=rid, modality=Modality.TEXT, arrival=0.0,
+                text_tokens=10, prompt_tokens=10, output_tokens=out,
+                tenant=tenant)
+    r.vclass = vclass
+    r.state = state
+    r.slo = 100.0
+    r.first_token_time = ttft
+    r.finish_time = finish
+    if state in (State.REJECTED, State.FAILED, State.CANCELLED):
+        r.aborted_at = 1.0
+        r.error = ("admission: x" if state is State.REJECTED
+                   else "load shed: x" if state is State.FAILED
+                   else "client cancel")
+    return r
+
+
+def test_summarize_excludes_non_completed_from_latency():
+    """Regression (ISSUE 8 satellite): a FAILED request with a recorded
+    first token must not drag TTFT percentiles; REJECTED/shed/FAILED are
+    reported as separate counts."""
+    M = VehicleClass.MOTORCYCLE
+    reqs = [_mk("f1", State.FINISHED, M, ttft=1.0, finish=2.0),
+            _mk("f2", State.FINISHED, M, ttft=3.0, finish=4.0),
+            # failed mid-decode with a huge recorded first-token time:
+            # the seed folded this 100s into the percentiles
+            _mk("x1", State.FAILED, M, ttft=100.0),
+            _mk("r1", State.REJECTED, M),
+            _mk("c1", State.CANCELLED, M)]
+    s = summarize(reqs)["overall"]
+    assert s["n"] == 5 and s["finished"] == 2
+    assert s["rejected"] == 1 and s["failed"] == 1 and s["cancelled"] == 1
+    assert s["shed"] == 1
+    assert s["ttft_avg"] == 2.0          # (1+3)/2, not (1+3+100)/3
+    assert s["ttft_p90"] < 3.1 and s["ttft_p99"] < 3.1
+    assert s["slo_violation_rate"] == 0.0
+
+
+def test_summarize_tenants_counters_and_fairness_signal():
+    M, T = VehicleClass.MOTORCYCLE, VehicleClass.TRUCK
+    reqs = ([_mk(f"a{i}", State.FINISHED, M, ttft=0.5, finish=1.0,
+                 tenant="a") for i in range(4)]
+            + [_mk("a-t", State.REJECTED, T, tenant="a")]
+            + [_mk(f"b{i}", State.FINISHED, T, ttft=2.0, finish=3.0,
+                   tenant="b") for i in range(2)]
+            + [_mk("b-r", State.REJECTED, M, tenant="b")])
+    t = summarize_tenants(reqs, duration=10.0)
+    assert t["a"]["finished"] == 4 and t["a"]["rejected"] == 1
+    assert t["a"]["served_by_class"]["motorcycle"] == 4
+    assert t["a"]["rejected_by_class"]["truck"] == 1
+    assert t["b"]["served_by_class"]["truck"] == 2
+    assert t["a"]["goodput"] == 0.4      # 4 in-SLO / 10 s
+    assert 0 < t["b"]["slo_attainment"] < 1
+
+
+# ---------------- trace-shaped workloads (tentpole part 3) ------------------
+
+
+def test_trace_workload_deterministic_and_tenanted():
+    cfg = WorkloadConfig(mix="MH", rate=4.0, num_requests=120, seed=11,
+                         tenants=3, heavy_tail_prob=0.1,
+                         diurnal_amplitude=0.5, burst_prob=0.05)
+    a, b = generate(cfg), generate(cfg)
+    assert [(r.rid, r.tenant, r.arrival, r.text_tokens, r.output_tokens,
+             r.shared_prefix_id) for r in a] == \
+           [(r.rid, r.tenant, r.arrival, r.text_tokens, r.output_tokens,
+             r.shared_prefix_id) for r in b]
+    tenants = {r.tenant for r in a}
+    assert tenants == {"tenant0", "tenant1", "tenant2"}
+    # tenant system prompts feed the prefix cache with shared content
+    sys_ids = {r.shared_prefix_id for r in a if r.shared_prefix_id}
+    assert sys_ids <= {"t11-0", "t11-1", "t11-2"} and sys_ids
+    assert all(r.text_tokens <= cfg.heavy_tail_text_cap for r in a)
+    assert all(r.output_tokens <= cfg.heavy_tail_out_cap for r in a)
+
+
+def test_trace_knobs_off_draw_nothing_extra():
+    base = WorkloadConfig(mix="MH", rate=2.0, num_requests=80, seed=5)
+    plain = generate(base)
+    assert all(r.tenant == "default" for r in plain)
+    # enabling trace knobs must not perturb the base stream's draws:
+    # arrivals shift (shaping) but sizes of untouched requests match
+    shaped = generate(WorkloadConfig(mix="MH", rate=2.0, num_requests=80,
+                                     seed=5, diurnal_amplitude=0.3))
+    assert [(r.text_tokens, r.mm_units, r.output_tokens)
+            for r in shaped] == \
+           [(r.text_tokens, r.mm_units, r.output_tokens) for r in plain]
+    assert [r.arrival for r in shaped] != [r.arrival for r in plain]
+
+
+# ---------------- the overload x chaos property -----------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       rate=st.floats(4.0, 30.0),
+       cancel=st.floats(0.0, 0.4), deadline=st.floats(0.0, 0.2),
+       encoder=st.floats(0.0, 0.4), step=st.floats(0.0, 0.03),
+       kv_pages=st.sampled_from([512, 1024, 2048]),
+       budget=st.floats(500.0, 5000.0),
+       graded=st.booleans())
+def test_any_overload_schedule_with_faults_conserves_resources(
+        seed, rate, cancel, deadline, encoder, step, kv_pages, budget,
+        graded):
+    """Arbitrary overload (rate, tenant budgets, graded brownout or
+    legacy shed) composed with an arbitrary FaultPlan: zero leaked
+    pages/pins, token buckets never negative, and the workload
+    partitions into terminal states (REJECTED included) exactly."""
+    plan = FaultPlan(seed=seed, rates=FaultRates(
+        cancel_prob=cancel, deadline_prob=deadline,
+        encoder_fault_prob=encoder, step_fault_prob=step,
+        deadline_min_s=0.5, deadline_max_s=20.0))
+    adm = AdmissionConfig(tenant_budgets={
+        "tenant0": TenantBudget(rate=budget, burst=budget * 8)})
+    brown = (BrownoutConfig(step_iters=5, cooldown_iters=10) if graded
+             else legacy_shed_config(10))
+    eng = _engine(plan, kv_pages=kv_pages, admission=adm, brownout=brown)
+    reqs = generate(WorkloadConfig(
+        mix="MH", rate=rate, num_requests=40, seed=seed % 100,
+        tenants=3, heavy_tail_prob=0.1, burst_prob=0.05,
+        duplicate_prob=0.3))
+    eng.run(reqs)
+    _assert_clean(eng, reqs)
+    assert eng.admission.min_bucket_level() >= 0.0
+    assert (eng.admission.admitted
+            + sum(eng.admission.rejections.values())
+            >= len([r for r in reqs if r.state is State.REJECTED]))
