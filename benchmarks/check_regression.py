@@ -32,6 +32,16 @@ blocking it:
     pages/encoder-cache pin refs, failover loses/double-finishes
     nothing, and the installed-but-empty faults layer is a bit-exact
     no-op (sim timings and real emitted tokens).
+  * ``BENCH_fleet.json`` — fleet tier. All gates exact and
+    wall-clock-free from a fresh fast run: zero invariant violations /
+    leaked pages / pins audited fleet-wide *including* drained and
+    killed replicas, exact terminal-state partition (nothing lost or
+    double-finished) under drains + a kill + migration chunk faults,
+    every scheduled drain completed, the mix shift repartitioned the
+    elastic group, real-executor migration emits oracle-identical
+    tokens over a non-empty transferred chain, elastic beats the
+    static partition, and the event-free ``Fleet`` is a bit-exact
+    no-op over ``Router``.
   * ``BENCH_slo.json`` — overload control. Exact, wall-clock-free
     gates from a fresh fast sweep: zero leaks / exact terminal-state
     partition under sustained overload (with and without chaos), the
@@ -337,12 +347,49 @@ def check_slo_baseline(failures: list[str]) -> None:
                         "and faults together")
 
 
+def check_fleet_baseline(failures: list[str]) -> None:
+    path = ROOT / "BENCH_fleet.json"
+    if not path.exists():
+        failures.append("BENCH_fleet.json missing - run "
+                        "`python -m benchmarks.run --only fleet_tolerance`")
+        return
+    json.loads(path.read_text())  # baseline must at least parse
+    from benchmarks.fleet_tolerance import measure
+    fresh = measure(fast=True)
+    gates = fresh["gates"]
+    exact_zero = ["invariant_violations", "leaked_pages", "leaked_pins",
+                  "in_flight", "lost", "double_finished"]
+    for name in exact_zero:
+        got = gates[name]
+        status = "ok" if got == 0 else "REGRESSION"
+        print(f"  fleet/{name}: {got}  [{status}]")
+        if status != "ok":
+            failures.append(f"fleet/{name}: {got} != 0")
+    booleans = ["real_migration_parity", "elastic_beats_static",
+                "no_events_identical"]
+    for name in booleans:
+        got = gates[name]
+        status = "ok" if got else "REGRESSION"
+        print(f"  fleet/{name}: {got}  [{status}]")
+        if status != "ok":
+            failures.append(f"fleet/{name} gate failed")
+    if gates["migrations_succeeded"] <= 0 or gates["pages_transferred"] <= 0:
+        failures.append("fleet/migration path never delivered a chain")
+    if gates["drains_completed"] != gates["drains_scheduled"]:
+        failures.append(f"fleet/drains: {gates['drains_completed']} of "
+                        f"{gates['drains_scheduled']} scheduled drains "
+                        "completed")
+    if gates["repartitions"] <= 0:
+        failures.append("fleet/repartitions: mix shift never repartitioned")
+
+
 def main(argv: list[str]) -> int:
     failures: list[str] = []
     print("== perf regression gate ==")
     check_encode_baseline(failures)
     check_prefix_baseline(failures)
     check_faults_baseline(failures)
+    check_fleet_baseline(failures)
     check_slo_baseline(failures)
     check_executor_baseline(failures,
                             skip_wallclock="--skip-wallclock" in argv)

@@ -1,0 +1,409 @@
+"""Fleet-tier chaos benchmark (ISSUE 9): drains, kills, elastic
+repartitioning and page-chain migration under diurnal/bursty traffic.
+
+Four experiments, all seeded (``--seed`` reproduces a CI failure):
+
+* **Fleet chaos** — a 4-8 replica elastic fleet at ~10x the failover
+  benchmark's request count, arrival stream shaped diurnal + bursty,
+  with a scheduled kill, scheduled drains, migration chunk faults
+  (timeouts + corruptions) and a truck-heavy -> text-only mix shift that
+  forces repartitions. Exact gates, audited fleet-wide *including*
+  drained and killed replicas (the export path releases everything):
+  zero allocator invariant violations, zero leaked KV pages, zero leaked
+  encoder-cache pin refs, every request in exactly one terminal state on
+  exactly one replica, nothing lost, nothing double-finished.
+* **Real-mode migration parity** — a video request is prefilled on one
+  real-executor (JAX) replica, its KV page chain migrated (payload
+  bytes + checksums) to a second replica mid-flight, and finished
+  there. Gate: the migrated run emits bit-identical tokens to an
+  unmigrated single-engine oracle, with a non-empty transferred chain.
+* **Elastic vs static** — the same mix-shift workload on an elastic
+  fleet vs the static truck-isolation partition. Gate: elastic goodput
+  and TTFT beat (or match) the static baseline — the repartition pays.
+* **No-events identity** — ``Fleet`` with the all-defaults
+  ``FleetConfig`` (no drains, no kills, inherited routing) must produce
+  the bit-exact per-request timeline and per-replica placement of
+  ``Router.run_stepped``.
+
+Full mode writes ``BENCH_fleet.json`` (the committed baseline checked
+by benchmarks/check_regression.py):
+
+    PYTHONPATH=src python -m benchmarks.run --only fleet_tolerance [--fast]
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.scheduler import make_policy
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.executors import SimExecutor, make_cost_model
+from repro.serving.faults import FaultPlan, FaultRates
+from repro.serving.fleet import Fleet, FleetConfig
+from repro.serving.metrics import (goodput, lifecycle_counts, summarize,
+                                   summarize_fleet)
+from repro.serving.migration import MigrationConfig, migrate
+from repro.serving.request import Modality, Request, State
+from repro.serving.router import Router
+from repro.serving.workload import WorkloadConfig, generate
+
+from .common import csv_row, resolve_seed, stack
+
+BASELINE_PATH = Path(__file__).resolve().parent.parent / "BENCH_fleet.json"
+
+POLICY = "tcm"
+DEFAULT_SEED = 7
+# migration-domain fault rates for the chaos run: roughly one chunk in
+# five faults on its first attempt, so retries genuinely fire; the low
+# permanent fraction keeps most faults transient (a permanent chunk
+# fault forces the whole transfer to fall back to re-prefill, which the
+# tests cover — here the protocol's retry path is the subject)
+MIG_RATES = dict(migration_timeout_prob=0.12, migration_corrupt_prob=0.08,
+                 permanent_frac=0.05)
+
+
+def _shaped(mix: str, n: int, seed: int, rate: float) -> WorkloadConfig:
+    """Diurnal + bursty arrivals with duplicates/shared prefixes so
+    migrations dedup against target caches, not just fresh imports."""
+    return WorkloadConfig(mix=mix, rate=rate, num_requests=n, seed=seed,
+                          duplicate_prob=0.3, shared_prefix_prob=0.3,
+                          diurnal_amplitude=0.5, diurnal_period_s=120.0,
+                          burst_prob=0.02, burst_factor=4.0,
+                          burst_len_s=5.0)
+
+
+def _mix_shift_workload(n: int, seed: int) -> list[Request]:
+    """Text flood (T0) first half, then a truck flood (LCV): the truck
+    share of arriving work explodes mid-run. A static truck-isolation
+    partition strands its light replicas while trucks queue on the heavy
+    pair; an elastic fleet shrinks the heavy group during the text phase
+    and grows it through the truck phase."""
+    n1 = n // 2
+    p1 = generate(_shaped("T0", n1, seed, rate=12.0))
+    p2 = generate(_shaped("LCV", n - n1, seed + 1, rate=3.0))
+    off = max(r.arrival for r in p1) + 1.0
+    for r in p2:                      # workload rids restart at r00000
+        r.rid = "p2" + r.rid
+        r._chunks_cache = None
+        r.arrival += off
+    return sorted(p1 + p2, key=lambda r: r.arrival)
+
+
+def _fleet_audit(router, reqs) -> dict:
+    """Fleet-wide conservation audit — every replica, including drained
+    and killed ones (export releases their state, so they must be as
+    clean as survivors)."""
+    violations = leaked_pages = leaked_pins = 0
+    for eng in router.engines:
+        try:
+            eng.allocator.check_invariants()
+        except AssertionError:
+            violations += 1
+        leaked_pages += eng.allocator.used_pages
+        if eng.encoder_cache is not None:
+            leaked_pins += eng.encoder_cache.stats()["pin_refs"]
+    counts = lifecycle_counts(reqs)
+    terminal_rids: list[str] = []
+    finished_rids: list[str] = []
+    for eng in router.engines:
+        for r in eng.finished:
+            finished_rids.append(r.rid)
+        for r in eng.finished + eng.rejected + eng.aborted:
+            terminal_rids.append(r.rid)
+    return {
+        "invariant_violations": violations,
+        "leaked_pages": leaked_pages,
+        "leaked_pins": leaked_pins,
+        "in_flight": counts["in_flight"],
+        "lost": (len(reqs) - sum(r.is_terminal for r in reqs)
+                 + len(router.lost)),
+        "double_finished": (
+            (len(finished_rids) - len(set(finished_rids)))
+            + (len(terminal_rids) - len(set(terminal_rids)))),
+        "lifecycle": counts,
+    }
+
+
+def run_fleet_chaos(n: int, seed: int, replicas: int) -> dict:
+    """The headline run: elastic fleet, mix-shift diurnal/bursty load,
+    one kill, scheduled drains, migration faults."""
+    _ex, _est, smart, _ = stack()
+    cm = make_cost_model("llava-7b")
+    reqs = _mix_shift_workload(n, seed)
+    # schedule events off the arrival stream so they land mid-run at any
+    # scale, inside the truck phase (second half) so the drains migrate
+    # requests with real multi-page chains; the kill comes later and
+    # races the drains' transfers
+    drain_a = reqs[int(n * 0.55)].arrival
+    kill_t = reqs[int(n * 0.70)].arrival
+    drains = {0: drain_a}
+    if replicas >= 6:
+        drains[1] = reqs[int(n * 0.60)].arrival
+    plan = FaultPlan(seed=seed, rates=FaultRates(**MIG_RATES),
+                     replica_kills={replicas - 1: kill_t})
+    fleet = Fleet([SimExecutor(cm) for _ in range(replicas)], smart,
+                  EngineConfig(kv_pages=4096, token_budget=512),
+                  policy=POLICY, routing="elastic",
+                  truck_replicas=replicas // 2, faults=plan,
+                  fleet=FleetConfig(drains=drains,
+                                    elastic_window=16, elastic_persist=4,
+                                    elastic_dwell_s=1.0))
+    fleet.run_stepped(reqs)
+    audit = _fleet_audit(fleet, reqs)
+    summary = summarize([r for eng in fleet.engines for r in eng.finished])
+    return {
+        "replicas": replicas,
+        "requests": n,
+        "drains_scheduled": len(drains),
+        "kill_time": kill_t,
+        "injected": dict(plan.injected),
+        "fleet": summarize_fleet(fleet),
+        "goodput": goodput(reqs),
+        "ttft_avg": (summary["overall"]["ttft_avg"]
+                     if summary and summary["overall"] else None),
+        **audit,
+    }
+
+
+def run_real_migration_parity() -> dict:
+    """Migrate a real-executor (JAX) request's KV chain between two
+    replicas mid-flight; the resumed decode must emit the exact tokens
+    of an unmigrated oracle."""
+    from repro.launch.serve import build_stack
+
+    def _req():
+        # 64 mm units + 16 text tokens: four full shareable pages of
+        # video KV, then the private text tail (the chain boundary)
+        return Request(rid="mig-parity", modality=Modality.VIDEO,
+                       arrival=0.0, text_tokens=16, mm_units=64,
+                       prompt_tokens=80, output_tokens=8,
+                       mm_hash="parity-vid")
+
+    # oracle: the same request, one engine, never migrated
+    ex_o, cls_o, cfg_o, _, _ = build_stack("chatglm3-6b", "real",
+                                           kv_pages=64)
+    oracle = Engine(make_policy(POLICY), ex_o, cls_o, cfg_o)
+    r_o = _req()
+    oracle.run([r_o])
+    oracle_tokens = ex_o.emitted.get(r_o.rid)
+
+    ex_s, cls_s, cfg_s, _, _ = build_stack("chatglm3-6b", "real",
+                                           kv_pages=64)
+    ex_d, _, _, _, _ = build_stack("chatglm3-6b", "real", kv_pages=64)
+    src = Engine(make_policy(POLICY), ex_s, cls_s, cfg_s)
+    dst = Engine(make_policy(POLICY), ex_d, cls_s, cfg_s)
+    req = _req()
+    pending = [req]
+    for _ in range(200):
+        pending = src.step(pending)
+        if req.state is State.RUNNING:
+            break
+    prefilled_on_src = req.prefilled
+    res = migrate(src, dst, req, src.now, MigrationConfig())
+    remaining = [req]
+    for _ in range(2000):
+        remaining = dst.step(remaining)
+        if req.is_terminal:
+            break
+    migrated_tokens = ex_d.emitted.get(req.rid)
+    return {
+        "status": res.status,
+        "prefilled_on_src": prefilled_on_src,
+        "pages_migrated": res.pages_imported,
+        "cached_prefix_tokens": req.cached_prefix_tokens,
+        "finished": req.state is State.FINISHED,
+        "src_leaked_pages": src.allocator.used_pages,
+        "dst_leaked_pages": dst.allocator.used_pages,
+        "token_parity": (oracle_tokens is not None
+                         and oracle_tokens == migrated_tokens),
+    }
+
+
+def run_elastic_vs_static(n: int, seed: int, replicas: int = 4) -> dict:
+    """Same mix-shift workload, elastic fleet vs static truck-isolation
+    partition: the repartition must pay in goodput/TTFT."""
+    _ex, _est, smart, _ = stack()
+
+    def _run(kind):
+        cm = make_cost_model("llava-7b")
+        reqs = _mix_shift_workload(n, seed)
+        kw = dict(policy=POLICY, truck_replicas=replicas // 2)
+        if kind == "elastic":
+            router = Fleet([SimExecutor(cm) for _ in range(replicas)],
+                           smart, EngineConfig(kv_pages=4096,
+                                               token_budget=512),
+                           routing="elastic",
+                           fleet=FleetConfig(elastic_window=16,
+                                             elastic_persist=4,
+                                             elastic_dwell_s=1.0), **kw)
+        else:
+            router = Router([SimExecutor(cm) for _ in range(replicas)],
+                            smart, EngineConfig(kv_pages=4096,
+                                                token_budget=512),
+                            routing="truck-isolation", **kw)
+        router.run_stepped(reqs)
+        done = [r for eng in router.engines for r in eng.finished]
+        summary = summarize(done)
+        span = max((r.finish_time for r in done if r.finish_time), default=1)
+        return {
+            "goodput": goodput(reqs),
+            "throughput_rps": len(done) / span,
+            "ttft_avg": summary["overall"]["ttft_avg"],
+            "repartitions": len(getattr(router, "repartition_events", [])),
+        }
+
+    elastic = _run("elastic")
+    static = _run("static")
+    return {
+        "elastic": elastic, "static": static,
+        "replicas": replicas,
+        "beats_static": (elastic["goodput"] >= static["goodput"]
+                         and elastic["ttft_avg"] <= static["ttft_avg"]),
+    }
+
+
+def run_no_events_identity(n: int, seed: int, replicas: int = 4) -> dict:
+    """Fleet with the all-defaults FleetConfig must be a bit-exact no-op
+    over Router: same per-request timeline, same per-replica placement."""
+    _ex, _est, smart, _ = stack()
+
+    def _run(cls, **kw):
+        cm = make_cost_model("llava-7b")
+        reqs = generate(_shaped("MH", n, seed, rate=4.0))
+        router = cls([SimExecutor(cm) for _ in range(replicas)], smart,
+                     EngineConfig(kv_pages=4096, token_budget=512),
+                     policy=POLICY, routing="least-loaded", **kw)
+        router.run_stepped(reqs)
+        snap = {r.rid: (r.state.value, r.finish_time, r.first_token_time,
+                        r.decoded, r.preemptions, r.cached_prefix_tokens)
+                for r in reqs}
+        placement = [sorted(r.rid for r in eng.finished)
+                     for eng in router.engines]
+        return snap, placement
+
+    snap_r, place_r = _run(Router)
+    snap_f, place_f = _run(Fleet, fleet=FleetConfig())
+    return {"identical": snap_r == snap_f and place_r == place_f}
+
+
+def measure(fast: bool = False) -> dict:
+    seed = resolve_seed(DEFAULT_SEED)
+    # ~10x the failover benchmark's request count in full mode
+    chaos = run_fleet_chaos(n=360 if fast else 2400, seed=seed,
+                            replicas=4 if fast else 6)
+    parity = run_real_migration_parity()
+    elastic = run_elastic_vs_static(240 if fast else 600, seed)
+    identity = run_no_events_identity(120 if fast else 400, seed)
+    mig = chaos["fleet"]["migrations"]
+    gates = {
+        "invariant_violations": chaos["invariant_violations"],
+        "leaked_pages": (chaos["leaked_pages"]
+                         + parity["src_leaked_pages"]
+                         + parity["dst_leaked_pages"]),
+        "leaked_pins": chaos["leaked_pins"],
+        "in_flight": chaos["in_flight"],
+        "lost": chaos["lost"],
+        "double_finished": chaos["double_finished"],
+        "migrations_attempted": mig["attempted"],
+        "migrations_succeeded": mig["succeeded"],
+        "pages_transferred": mig["pages_transferred"],
+        "drains_completed": len(chaos["fleet"]["drain_events"]),
+        "drains_scheduled": chaos["drains_scheduled"],
+        "repartitions": (len(chaos["fleet"]["repartition_events"])
+                         + elastic["elastic"]["repartitions"]),
+        "real_migration_parity": (parity["token_parity"]
+                                  and parity["finished"]),
+        "real_pages_migrated": parity["pages_migrated"],
+        "elastic_beats_static": elastic["beats_static"],
+        "no_events_identical": identity["identical"],
+    }
+    return {"seed": seed, "fast": fast, "mig_rates": dict(MIG_RATES),
+            "chaos": chaos, "real_migration": parity, "elastic": elastic,
+            "identity": identity, "gates": gates}
+
+
+def assert_gates(gates: dict) -> None:
+    assert gates["invariant_violations"] == 0, gates
+    assert gates["leaked_pages"] == 0, gates
+    assert gates["leaked_pins"] == 0, gates
+    assert gates["in_flight"] == 0, gates
+    assert gates["lost"] == 0, gates
+    assert gates["double_finished"] == 0, gates
+    assert gates["migrations_attempted"] > 0, \
+        "fleet chaos never exercised migration — move the drains earlier"
+    assert gates["migrations_succeeded"] > 0, \
+        "no migration ever delivered a chain — protocol or faults broken"
+    assert gates["pages_transferred"] > 0, gates
+    assert gates["drains_completed"] == gates["drains_scheduled"], \
+        "a scheduled drain never completed"
+    assert gates["repartitions"] > 0, \
+        "the mix shift never triggered an elastic repartition"
+    assert gates["real_migration_parity"], \
+        "migrated real-executor run no longer emits oracle-identical tokens"
+    assert gates["real_pages_migrated"] >= 2, gates
+    assert gates["elastic_beats_static"], \
+        "elastic repartitioning lost to the static partition"
+    assert gates["no_events_identical"], \
+        "event-free Fleet is no longer bit-exact with Router"
+
+
+def main(fast: bool = False):
+    results = measure(fast=fast)
+    rows = []
+    ch = results["chaos"]
+    mig = ch["fleet"]["migrations"]
+    print(f"-- fleet chaos (seed {results['seed']}): {ch['replicas']} "
+          f"replicas, {ch['requests']} reqs, {ch['drains_scheduled']} "
+          f"drains, kill@{ch['kill_time']:.1f}s --")
+    print(f"{'replica':>8}{'state':>10}{'finished':>9}{'mig_out':>8}"
+          f"{'mig_in':>7}{'pages':>6}{'pins':>5}")
+    for rep in ch["fleet"]["replicas"]:
+        print(f"{rep['replica']:>8}{rep['state']:>10}{rep['finished']:>9}"
+              f"{rep['migrations_out']:>8}{rep['migrations_in']:>7}"
+              f"{rep['used_pages']:>6}{rep['pinned_encoder_entries']:>5}")
+    print(f"   migrations: {mig['attempted']} attempted, "
+          f"{mig['succeeded']} succeeded, {mig['fallbacks']} fallbacks, "
+          f"{mig['noops']} empty (plain redispatch), {mig['retries']} "
+          f"chunk retries; pages {mig['pages_transferred']} transferred "
+          f"+ {mig['pages_deduped']} deduped")
+    print(f"   drains: {len(ch['fleet']['drain_events'])} completed "
+          f"(avg {ch['fleet']['drain_duration_avg']:.2f}s); "
+          f"repartitions {len(ch['fleet']['repartition_events'])}; "
+          f"injected {ch['injected']}")
+    print(f"   goodput {ch['goodput']:.3f}  ttft {ch['ttft_avg']:.3f}  "
+          f"lost {ch['lost']}  double {ch['double_finished']}")
+    pr = results["real_migration"]
+    print(f"-- real-mode migration: {pr['pages_migrated']} pages moved "
+          f"({pr['prefilled_on_src']} tokens prefilled on src), cached "
+          f"prefix on dst {pr['cached_prefix_tokens']}, token parity "
+          f"{pr['token_parity']}")
+    el = results["elastic"]
+    print(f"-- elastic vs static ({el['replicas']} replicas): goodput "
+          f"{el['elastic']['goodput']:.3f} vs {el['static']['goodput']:.3f}"
+          f", ttft {el['elastic']['ttft_avg']:.3f} vs "
+          f"{el['static']['ttft_avg']:.3f}, repartitions "
+          f"{el['elastic']['repartitions']}")
+    print(f"-- no-events identity: {results['identity']['identical']}")
+    assert_gates(results["gates"])
+    print("-- all fleet gates green (zero leaks fleet-wide / exact "
+          "terminal partition / oracle token parity / elastic beats "
+          "static / event-free bit-exactness)")
+    rows.append(csv_row("fleet.chaos_goodput", ch["goodput"]))
+    rows.append(csv_row("fleet.migrations_succeeded", mig["succeeded"]))
+    rows.append(csv_row("fleet.pages_transferred",
+                        mig["pages_transferred"]))
+    rows.append(csv_row("fleet.elastic_goodput_gain",
+                        el["elastic"]["goodput"] - el["static"]["goodput"]))
+    rows.append(csv_row("fleet.elastic_ttft_gain_s",
+                        el["static"]["ttft_avg"]
+                        - el["elastic"]["ttft_avg"]))
+    if not fast:
+        BASELINE_PATH.write_text(json.dumps(results, indent=2,
+                                            default=str) + "\n")
+        print(f"wrote {BASELINE_PATH.name}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

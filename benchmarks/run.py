@@ -26,7 +26,7 @@ def main() -> None:
     from . import (ablation, assigned_archs, characterization, common,
                    decode_priority, e2e,
                    encode_overlap, estimator_accuracy, fault_tolerance,
-                   load_scaling,
+                   fleet_tolerance, load_scaling,
                    memory_pressure, multi_replica, preemptions, prefix_cache,
                    priority_curves, real_executor, roofline,
                    scheduler_overhead, slo_attainment, slo_scales,
@@ -38,6 +38,7 @@ def main() -> None:
         ("real_executor", real_executor),
         ("prefix_cache", prefix_cache),
         ("fault_tolerance", fault_tolerance),
+        ("fleet_tolerance", fleet_tolerance),
         ("slo_attainment", slo_attainment),
         ("fig2_characterization", characterization),
         ("fig3_workload_mix", workload_mix),

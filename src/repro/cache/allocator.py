@@ -152,6 +152,7 @@ class BlockAllocator:
         self.prefix_evictions = 0
         self.cow_copies = 0
         self.published_pages = 0
+        self.imported_pages = 0   # pages installed via import_chain
 
     # -- queries ----------------------------------------------------------
     @property
@@ -351,11 +352,64 @@ class BlockAllocator:
         self.published_pages += new
         return new
 
+    def import_chain(self, page_runs) -> list[tuple[int, int, bool]]:
+        """Install a migrated page chain as *cached* trie content — the
+        receive half of the ISSUE 9 page-chain transfer protocol. The
+        prefix trie doubles as the transfer manifest: ``page_runs`` is a
+        list of ``(runs, tokens)`` in chain order (the sender's trie
+        path, already checksum-verified by the caller), and pages landing
+        here are indexed zero-ref/evictable exactly as if a local prefill
+        had published them — the migrated request then re-claims them
+        through the ordinary ``match_prefix``/``claim_prefix`` admission
+        flow, and dedup is free: positions whose content this allocator
+        already caches are skipped, not re-allocated.
+
+        Returns ``[(chain_index, page, fresh)]`` — ``fresh`` pages need
+        their KV payload written (real executors scatter the transferred
+        bytes in); pre-existing pages already hold identical-content KV.
+        The walk stops early at a partial/private-led page (never
+        shareable), when capacity is exhausted, or if eviction under
+        pressure reclaimed the chain built so far — a shorter chain is
+        still correct, the target just re-prefills a longer residual."""
+        node = self._root
+        out: list[tuple[int, int, bool]] = []
+        for i, (runs, ptoks) in enumerate(page_runs):
+            if ptoks < self.page_size or not _shareable(runs[0][0]):
+                break
+            child = node.children.get(runs)
+            if child is None:
+                if not self._free and not self._cached_free:
+                    break   # no room for the rest of the chain
+                page = self._pop_page()
+                if node is not self._root and \
+                        node.page not in self._node_of:
+                    # the eviction inside _pop_page reclaimed our own
+                    # freshly-imported chain (everything else was hotter):
+                    # stop — linking to an unlinked node would corrupt
+                    # the trie. Return the drawn page first.
+                    self._free.append(page)
+                    break
+                child = _Node(page, runs, node)
+                node.link(child)
+                self._node_of[page] = child
+                self._ref[page] = 0
+                self._cached_free.add(page)
+                self.imported_pages += 1
+                out.append((i, page, True))
+            else:
+                out.append((i, child.page, False))
+            self._touch(child)
+            node = child
+            if any(not _shareable(cid) for cid, _o, _l in runs):
+                break   # mixed boundary page: COW donor only, chain ends
+        return out
+
     def prefix_stats(self) -> dict:
         return {
             "hits": self.prefix_hits,
             "tokens_served": self.prefix_tokens_served,
             "published_pages": self.published_pages,
+            "imported_pages": self.imported_pages,
             "evictions": self.prefix_evictions,
             "cow_copies": self.cow_copies,
             "cached_pages": len(self._node_of),

@@ -263,6 +263,32 @@ class PagedStackStore:
         v = self.v_pages[rows].reshape(B, -1, *self.v_pages.shape[-2:])
         return k, v
 
+    # -- cross-replica page-chain migration (ISSUE 9) ----------------------
+    def _page_rows(self, page: int):
+        import numpy as np
+        return np.arange(self.layers) * self.pages_per_layer + page
+
+    def export_page(self, page: int):
+        """One allocator page's K/V across every layer of the stack as a
+        host array pair — the wire payload of the migration protocol
+        (serving/migration.py checksums and chunks it). Shape
+        (layers, page, KV, hd) each; dtype is the container dtype, whose
+        values are bf16-rounded on every backend (see ``store_dtype``),
+        so payload bytes round-trip bit-exactly between replicas."""
+        import numpy as np
+        rows = self._page_rows(page)
+        return np.asarray(self.k_pages[rows]), np.asarray(self.v_pages[rows])
+
+    def import_page(self, page: int, k, v) -> "PagedStackStore":
+        """Write a transferred page payload (``export_page`` counterpart)
+        into this store at ``page``. Off the hot path — migrations are
+        rare operator events — so a plain functional update, no jit."""
+        rows = self._page_rows(page)
+        return PagedStackStore(
+            self.k_pages.at[rows].set(jnp.asarray(k, self.k_pages.dtype)),
+            self.v_pages.at[rows].set(jnp.asarray(v, self.v_pages.dtype)),
+            self.layers)
+
 
 jax.tree_util.register_pytree_node(
     PagedStackStore,

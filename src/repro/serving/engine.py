@@ -250,7 +250,9 @@ class Engine:
             pre = getattr(self.executor, "preprocess_delay",
                           lambda r: 0.0)(req)
             req.preprocess_time = pre
-            req.ready_at = req.arrival + pre
+            # a migrated request is not schedulable before its page-chain
+            # transfer lands (ready_floor is 0.0 otherwise — bit-exact)
+            req.ready_at = max(req.arrival + pre, req.ready_floor)
             if req.slo == float("inf"):
                 req.slo = self.config.slo_scale * \
                     self.executor.isolated_e2e(req)
@@ -376,6 +378,52 @@ class Engine:
         """Public cancellation entry point (client disconnect): abort a
         non-terminal request and release everything it holds."""
         return self._abort(req, State.CANCELLED, reason)
+
+    # -- fleet tier (ISSUE 9) ------------------------------------------
+    def export_request(self, req: Request) -> bool:
+        """Release every engine-side resource of a non-terminal request
+        WITHOUT deciding its fate — the handoff half of drain, migration,
+        and failover (the fleet re-dispatches the request elsewhere):
+        queue / running / prefilling membership, KV pages (ref-aware, so
+        shared prefix chains survive), encoder-cache pin, executor slot
+        and per-request executor state, and the deadline-heap entry (a
+        live source replica must never expire a request that now lives on
+        another replica). Exactly-once via the same membership guards
+        ``_abort`` uses; returns False for terminal requests (nothing to
+        hand off) and for requests this engine does not hold."""
+        if req.state in TERMINAL_STATES:
+            return False
+        prev = req.state
+        if prev in (State.WAITING, State.PREEMPTED):
+            # vclass is None until first ingest: a routed-but-never-
+            # ingested request holds nothing here beyond the no-op
+            # releases below
+            if req.vclass is not None and \
+                    req in self.queues.queues[req.vclass]:
+                self.queues.remove(req)
+        elif prev is State.ENCODING:
+            if req in self.encode_queues.queues[req.vclass]:
+                self.encode_queues.remove(req)
+        elif prev is State.PREFILLING:
+            self.prefilling.pop(req, None)
+        elif prev is State.RUNNING:
+            self.running.pop(req, None)
+        if self._victim_view is not None:
+            self._victim_view.discard(req)
+        self.allocator.free(req.rid)
+        if hasattr(self.executor, "release_slot"):
+            self.executor.release_slot(req)
+        if hasattr(self.executor, "evict_request"):
+            # release_slot keeps non-terminal per-rid memos (the request
+            # would normally run again HERE); an exported request never
+            # does, so drop them on the source executor
+            self.executor.evict_request(req.rid)
+        self._unpin_encoder(req)
+        if self._deadline_heap:
+            self._deadline_heap = [e for e in self._deadline_heap
+                                   if e[2] is not req]
+            heapq.heapify(self._deadline_heap)
+        return True
 
     def _expire_deadlines(self) -> None:
         """Abort every non-terminal request whose hard deadline passed.

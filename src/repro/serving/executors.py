@@ -18,7 +18,6 @@ two emit bit-identical tokens).
 from __future__ import annotations
 
 import time
-import warnings
 import zlib
 from collections import deque
 from dataclasses import dataclass, replace
@@ -221,8 +220,9 @@ class ExecutorConfig:
     """Validated construction surface for ``ModelExecutor``.
 
     One place for what used to be ``__init__`` kwarg sprawl; Engine,
-    Router, benchmarks and tests construct through it (the bare kwargs
-    are still accepted for one release via a deprecation shim).
+    Router, benchmarks and tests construct through it (bare-kwargs
+    construction was removed after its one-release deprecation window
+    and now raises ``TypeError``).
 
     ``resolved()`` is the single derivation point for the ``num_pages``
     default from slot geometry — the constructor and
@@ -313,20 +313,16 @@ class ModelExecutor:
         from repro.cache import BlockAllocator
         from repro.models import transformer as T
         from repro.models.params import init_params
-        if config is None:
-            # deprecation shim (one release): the old kwarg construction
-            # surface maps 1:1 onto ExecutorConfig fields
-            if kwargs:
-                warnings.warn(
-                    "constructing ModelExecutor from bare keyword "
-                    "arguments is deprecated; pass "
-                    "ExecutorConfig(...) instead",
-                    DeprecationWarning, stacklevel=2)
-            config = ExecutorConfig(**kwargs)
-        elif kwargs:
+        if kwargs:
+            # the PR 7 one-release deprecation window for bare-kwargs
+            # construction is over: fail loudly with the migration path
             raise TypeError(
-                "pass either an ExecutorConfig or the deprecated bare "
-                f"kwargs, not both: {sorted(kwargs)}")
+                "ModelExecutor no longer accepts bare keyword arguments "
+                f"({sorted(kwargs)}); construct an ExecutorConfig — "
+                "ModelExecutor(cfg, ExecutorConfig("
+                + ", ".join(f"{k}=..." for k in sorted(kwargs)) + "))")
+        if config is None:
+            config = ExecutorConfig()
         config = config.resolved()
         self.config = config
         self.jnp = jnp
@@ -463,6 +459,65 @@ class ModelExecutor:
         self._stores = self._cow_jit(self._stores,
                                      self.jnp.int32(cow_src),
                                      self.jnp.int32(cow_dst))
+
+    # -- page-chain migration payloads (ISSUE 9) -----------------------------
+    def evict_request(self, rid: str) -> None:
+        """Drop every per-rid memo (prompt stream, profile, emitted) for a
+        request exported off this replica — it will never run here again,
+        so the non-terminal retention in ``release_slot`` does not apply."""
+        self._prompt_cache.pop(rid, None)
+        self._isolated_ttft.pop(rid, None)
+        self.emitted.pop(rid, None)
+        self._ctx.pop(rid, None)
+
+    def export_page_payload(self, pages: list[int]) -> list[bytes]:
+        """Serialize the KV bytes of allocator ``pages`` — one ``bytes``
+        blob per page, concatenating every stage/block store's
+        ``export_page`` rows in declaration order. The blob is the wire
+        payload the migration protocol checksums, chunks, and (on the
+        target) hands to ``import_page_payload`` at the target's own page
+        ids; both replicas share the model config, so the layout is
+        positional. Values are bf16-rounded on write (cache.paged), so
+        payload round-trips are bit-exact and migrated prefixes decode
+        the same tokens the source would have."""
+        if self._stores is None:
+            self._stores = self._make_stores()
+        out = []
+        for p in pages:
+            parts = []
+            for stage in self._stores:
+                for s in stage.values():
+                    k, v = s.export_page(p)
+                    parts.append(k.tobytes())
+                    parts.append(v.tobytes())
+            out.append(b"".join(parts))
+        return out
+
+    def import_page_payload(self, pages: list[int],
+                            payloads: list[bytes]) -> None:
+        """Write transferred page blobs into this replica's stores at the
+        target-side page ids ``pages`` (``export_page_payload``'s inverse)."""
+        import numpy as np
+        if self._stores is None:
+            self._stores = self._make_stores()
+        for p, blob in zip(pages, payloads):
+            off = 0
+            stores = []
+            for stage in self._stores:
+                new_stage = {}
+                for name, s in stage.items():
+                    shape = (s.layers, s.page_size) + s.k_pages.shape[-2:]
+                    count = int(np.prod(shape))
+                    dt = np.dtype(s.k_pages.dtype)
+                    k = np.frombuffer(blob, dt, count,
+                                      off).reshape(shape)
+                    off += count * dt.itemsize
+                    v = np.frombuffer(blob, dt, count,
+                                      off).reshape(shape)
+                    off += count * dt.itemsize
+                    new_stage[name] = s.import_page(p, k, v)
+                stores.append(new_stage)
+            self._stores = stores
 
     @property
     def max_pages(self) -> int:

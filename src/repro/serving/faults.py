@@ -25,6 +25,13 @@ Injection points (the engine/router query these; ``None`` plan = no-op):
   * ``kill_time(replica)`` — whole-replica crash for the router's stepped
     co-simulation; in-flight requests are re-dispatched prefix-cache-aware
     to surviving replicas.
+  * ``migration_fault(rid, chunk, attempt)`` — migration-domain faults
+    (ISSUE 9): one bounded chunk of a page-chain transfer times out or
+    arrives corrupted (checksum verification fails); the migrator retries
+    with backoff, then falls back to residual re-prefill on the target.
+    Source/target-dies-mid-transfer are not sampled here — they emerge
+    when ``kill_time`` intersects the transfer window (serving/migration.py
+    cuts the transfer off at the crash).
 
 Determinism contract: per-request decisions are hashed from
 ``(seed, kind, rid)`` — independent of arrival order, scheduling, or how
@@ -72,6 +79,10 @@ class FaultRates:
     deadline_prob: float = 0.0
     encoder_fault_prob: float = 0.0
     step_fault_prob: float = 0.0
+    # migration-domain (ISSUE 9): per-chunk probabilities that one bounded
+    # chunk of a page-chain transfer times out / fails checksum verify
+    migration_timeout_prob: float = 0.0
+    migration_corrupt_prob: float = 0.0
     # a faulted request/iteration is *permanent* (outlasts every retry)
     # with this probability; otherwise it heals after 1-2 retries
     permanent_frac: float = 0.15
@@ -88,6 +99,8 @@ class FaultRates:
             deadline_prob=min(1.0, self.deadline_prob * f),
             encoder_fault_prob=min(1.0, self.encoder_fault_prob * f),
             step_fault_prob=min(1.0, self.step_fault_prob * f),
+            migration_timeout_prob=min(1.0, self.migration_timeout_prob * f),
+            migration_corrupt_prob=min(1.0, self.migration_corrupt_prob * f),
             permanent_frac=self.permanent_frac,
             deadline_min_s=self.deadline_min_s,
             deadline_max_s=self.deadline_max_s)
@@ -113,6 +126,8 @@ class FaultPlan:
     encoder_faults: dict = field(default_factory=dict)  # rid -> n failures
     step_faults: dict = field(default_factory=dict)    # iter -> n failures
     replica_kills: dict = field(default_factory=dict)  # replica -> time
+    # (rid, chunk) -> ("timeout"|"corrupt", n attempts it outlasts)
+    migration_faults: dict = field(default_factory=dict)
 
     def __post_init__(self):
         # run-scoped observation state (see module docstring)
@@ -122,9 +137,10 @@ class FaultPlan:
         self._deadline_memo: dict[str, float | None] = {}
         self._encoder_memo: dict[str, int] = {}
         self._step_memo: dict[int, int] = {}
+        self._migration_memo: dict[tuple, tuple] = {}
         # counters (surfaced by the chaos benchmark)
         self.injected = {"cancel": 0, "deadline": 0, "encoder": 0,
-                         "step": 0}
+                         "step": 0, "mig_timeout": 0, "mig_corrupt": 0}
 
     # -- deterministic per-key RNG ----------------------------------------
     def _rng(self, kind: str, key) -> np.random.Generator:
@@ -227,6 +243,38 @@ class FaultPlan:
     def kill_time(self, replica: int) -> float | None:
         return self.replica_kills.get(replica)
 
+    # -- page-chain migration faults (ISSUE 9) -----------------------------
+    def migration_fault(self, rid: str, chunk: int,
+                        attempt: int) -> str | None:
+        """Fault for transferring ``chunk`` of ``rid``'s page chain on
+        (0-based) retry ``attempt``: ``"timeout"`` (the chunk never
+        arrives within the chunk timeout), ``"corrupt"`` (it arrives but
+        checksum verification rejects it), or None. Like every injection,
+        hashed purely from (seed, kind, rid, chunk) so a replay sees the
+        identical fault sequence regardless of when the migration runs."""
+        key = (rid, chunk)
+        ent = self._migration_memo.get(key)
+        if ent is None:
+            ent = self.migration_faults.get(key)
+            if ent is None:
+                kind, n = None, 0
+                pt = self.rates.migration_timeout_prob
+                pc = self.rates.migration_corrupt_prob
+                if pt > 0 or pc > 0:
+                    rng = self._rng("migration", f"{rid}:{chunk}")
+                    u = rng.uniform()
+                    if u < pt:
+                        kind, n = "timeout", self._severity(rng)
+                    elif u < pt + pc:
+                        kind, n = "corrupt", self._severity(rng)
+                ent = (kind, n)
+            self._migration_memo[key] = ent
+        kind, n = ent
+        if kind is not None and attempt < n:
+            self.injected["mig_" + kind] += 1
+            return kind
+        return None
+
     # -- reporting ---------------------------------------------------------
     def describe(self) -> dict:
         return {
@@ -238,6 +286,7 @@ class FaultPlan:
                 "encoder_faults": len(self.encoder_faults),
                 "step_faults": len(self.step_faults),
                 "replica_kills": dict(self.replica_kills),
+                "migration_faults": len(self.migration_faults),
             },
             "injected": dict(self.injected),
         }

@@ -1,0 +1,426 @@
+"""Fleet tier: replica lifecycle, graceful drain, elastic repartitioning
+(ISSUE 9 tentpole).
+
+``Router`` (serving/router.py) treats replicas as permanently-identical
+crash-only boxes: routing modes are static and the only lifecycle event is
+a kill. Production fleets also *drain* replicas (rolling restarts,
+scale-down), watch replica *health*, and re-shape modality partitions as
+the arrival mix shifts (ElasticMM, PAPERS.md). ``Fleet`` layers all of
+that on the same stepped co-simulation:
+
+  * **lifecycle** — every replica is HEALTHY / DEGRADED / DRAINING / DEAD.
+    Health is scored each co-sim step from heartbeat-style signals off the
+    stepped clock (brownout-ladder level, backlog depth, clock lag behind
+    the fleet frontier) with a consecutive-observation hysteresis window,
+    so one bad step never flaps a replica.
+  * **graceful drain** — a scheduled drain stops admissions to the
+    replica, lets RUNNING decodes finish in place, and *migrates*
+    everything else off via the page-chain transfer protocol
+    (serving/migration.py): prefilled KV moves, the target re-prefills
+    only the residual. When the last decode completes the replica leaves
+    the fleet cleanly (state DEAD, nothing lost, caches audit empty).
+  * **elastic repartitioning** — routing mode ``"elastic"`` is
+    truck-isolation with a *dynamic* heavy-group size: a sliding window
+    of routed arrivals tracks the truck share of estimated prefill work,
+    and when the desired heavy-group size disagrees with the current one
+    persistently (hysteresis: N consecutive decisions + a dwell time) the
+    partition moves one replica at a time. A replica leaving the heavy
+    group has its queued trucks migrated to the remaining heavy replicas.
+
+**Bit-exactness contract**: with no drains scheduled, no kills in the
+fault plan, and an inherited routing mode, ``Fleet.run_stepped`` produces
+the exact timeline of ``Router.run_stepped``. The fleet defers routing to
+arrival time (so repartitions can steer traffic mid-run), but routes in
+the same arrival order with the same ``_route`` state, and only ever
+routes a request before the co-sim frontier reaches its arrival — each
+engine still ingests each request at the same local clock, so per-replica
+simulations are unchanged. The no-events identity is gated in
+benchmarks/fleet_tolerance.py.
+"""
+from __future__ import annotations
+
+import enum
+from collections import deque
+from dataclasses import dataclass, field
+
+from .migration import MigrationConfig, migrate
+from .request import Request, VehicleClass
+from .router import Router
+
+
+class ReplicaState(str, enum.Enum):
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"    # signals bad for >= health_window steps:
+    #                          elastic routing steers new work away
+    DRAINING = "draining"    # no admissions; decodes finishing; queued
+    #                          work migrating off
+    DEAD = "dead"            # crashed (kill) or drained to completion
+
+
+@dataclass
+class FleetConfig:
+    """Fleet-tier knobs. The all-defaults config schedules nothing — the
+    bit-exact configuration."""
+    # operator schedule: replica index -> sim time to begin draining
+    drains: dict = field(default_factory=dict)
+    migration: MigrationConfig = field(default_factory=MigrationConfig)
+    # -- elastic repartitioning ("elastic" routing mode) ----------------
+    elastic_window: int = 32       # routed arrivals in the sliding window
+    elastic_min_heavy: int = 1     # heavy-group size bounds
+    elastic_max_heavy: int | None = None   # default: n_replicas - 1
+    elastic_persist: int = 8       # consecutive decisions before a move
+    elastic_dwell_s: float = 5.0   # min sim seconds between moves
+    # -- health scoring -------------------------------------------------
+    degraded_ladder_level: int = 2   # brownout level >= this is a signal
+    degraded_backlog: int = 64       # non-terminal assigned reqs >= this
+    degraded_lag_s: float = 30.0     # clock behind fleet frontier >= this
+    health_window: int = 3           # consecutive observations to flip
+
+
+@dataclass
+class Fleet(Router):
+    """A ``Router`` with replica lifecycle, drain, and elastic routing.
+    All Router fields and routing modes apply; add ``routing="elastic"``
+    and a ``FleetConfig`` to enable the fleet-only behaviors."""
+    fleet: FleetConfig = field(default_factory=FleetConfig)
+
+    def __post_init__(self):
+        super().__post_init__()
+        n = len(self.engines)
+        self.replica_state = [ReplicaState.HEALTHY] * n
+        # elastic partition: heavy group starts as the truck-isolation
+        # suffix so "elastic" with a static mix behaves like the baseline
+        self._heavy = set(range(n - self.truck_replicas, n))
+        self._work_window: deque = deque(maxlen=self.fleet.elastic_window)
+        self._persist = 0
+        self._last_repartition = float("-inf")
+        # drain bookkeeping
+        self._drain_started: dict[int, float] = {}
+        # health hysteresis: consecutive bad / good observations
+        self._health_bad = [0] * n
+        self._health_good = [0] * n
+        # counters (surfaced via metrics.summarize_fleet)
+        self.migrations_out = [0] * n
+        self.migrations_in = [0] * n
+        self.migrations_attempted = 0
+        self.migrations_succeeded = 0
+        self.migration_fallbacks = 0
+        self.migration_noops = 0     # nothing prefilled: plain redispatch
+        self.migration_retries = 0
+        self.migrated_pages = 0
+        self.deduped_pages = 0
+        self.drain_events: list[dict] = []
+        self.repartition_events: list[dict] = []
+        self.health_events: list[dict] = []
+
+    # -- eligibility ----------------------------------------------------
+    def _eligible(self) -> list[int]:
+        """Replicas that may receive new or re-dispatched work."""
+        return [j for j in range(len(self.engines))
+                if self.alive[j]
+                and self.replica_state[j] is not ReplicaState.DRAINING]
+
+    def _redispatch_pool(self) -> list[int]:
+        pool = self._eligible()
+        if pool:
+            return pool
+        # last resort: a draining replica beats losing the request
+        return [j for j in range(len(self.engines)) if self.alive[j]]
+
+    # -- routing --------------------------------------------------------
+    def _route(self, req: Request) -> int:
+        if self.routing != "elastic":
+            i = super()._route(req)
+            if self.alive[i] and \
+                    self.replica_state[i] is not ReplicaState.DRAINING:
+                return i
+            # inherited mode picked an ineligible replica (only possible
+            # once fleet events have fired, so bit-exactness is intact):
+            # fall through to the best eligible one
+            j = min(self._redispatch_pool(),
+                    key=lambda k: self._load[k])
+            self._load[j] += req.est_prefill
+            return j
+        vclass, est_prefill, _ = self.classifier.classify(
+            req.modality.value, req.text_tokens, req.mm_units)
+        self._note_arrival(vclass, est_prefill)
+        pool = self._redispatch_pool()
+        healthy = [j for j in pool
+                   if self.replica_state[j] is ReplicaState.HEALTHY]
+        pool = healthy or pool
+        heavy = [j for j in pool if j in self._heavy]
+        light = [j for j in pool if j not in self._heavy]
+        if vclass is VehicleClass.TRUCK:
+            cand = heavy or pool
+        elif vclass is VehicleClass.CAR:
+            cand = (light + heavy) or pool
+        else:
+            cand = light or pool
+        i = min(cand, key=lambda j: self._load[j])
+        self._load[i] += est_prefill
+        return i
+
+    def _note_arrival(self, vclass, est_prefill: float) -> None:
+        self._work_window.append(
+            (est_prefill, vclass is VehicleClass.TRUCK))
+
+    def _desired_heavy(self) -> int | None:
+        if len(self._work_window) < self._work_window.maxlen:
+            return None              # window not yet representative
+        total = sum(w for w, _t in self._work_window)
+        if total <= 0:
+            return None
+        frac = sum(w for w, t in self._work_window if t) / total
+        n = len(self._eligible())
+        lo = self.fleet.elastic_min_heavy
+        hi = self.fleet.elastic_max_heavy
+        if hi is None:
+            hi = max(lo, n - 1)
+        return max(lo, min(hi, round(frac * n)))
+
+    def _maybe_repartition(self, remaining, clk: float) -> None:
+        """One hysteresis-gated partition move: grow or shrink the heavy
+        group by a single replica, migrating queued trucks off a replica
+        that leaves it."""
+        cur = len([j for j in self._eligible() if j in self._heavy])
+        want = self._desired_heavy()
+        if want is None or want == cur:
+            self._persist = 0
+            return
+        self._persist += 1
+        if self._persist < self.fleet.elastic_persist or \
+                clk - self._last_repartition < self.fleet.elastic_dwell_s:
+            return
+        self._persist = 0
+        self._last_repartition = clk
+        eligible = self._eligible()
+        if want > cur:
+            # promote the least-loaded light replica
+            light = [j for j in eligible if j not in self._heavy]
+            if not light:
+                return
+            j = min(light, key=lambda k: self._load[k])
+            self._heavy.add(j)
+            moved = 0
+        else:
+            # demote the least-loaded heavy replica and move its queued
+            # trucks to the replicas staying heavy
+            heavy = [j for j in eligible if j in self._heavy]
+            if len(heavy) <= 1:
+                return
+            j = min(heavy, key=lambda k: self._load[k])
+            self._heavy.discard(j)
+            moved = self._migrate_queued_trucks(j, remaining)
+        self.repartition_events.append({
+            "time": clk, "replica": j,
+            "direction": "grow" if want > cur else "shrink",
+            "heavy": sorted(self._heavy & set(self._eligible())),
+            "migrated": moved})
+
+    def _migrate_queued_trucks(self, i: int, remaining) -> int:
+        """Move queued (not yet decoding) trucks off replica ``i`` after
+        it left the heavy group."""
+        eng = self.engines[i]
+        moved = 0
+        for req in list(self._assigned[i]):
+            if req.is_terminal or req.vclass is not VehicleClass.TRUCK:
+                continue
+            if req.state.value == "running":
+                continue             # decodes finish in place
+            self._move_request(i, req, remaining, eng.now)
+            moved += 1
+        return moved
+
+    # -- migration ------------------------------------------------------
+    def _move_request(self, i: int, req: Request, remaining,
+                      start: float) -> None:
+        """Migrate one non-terminal request off replica ``i`` via the
+        page-chain protocol, falling back to plain re-dispatch (full
+        re-prefill on the target) when the transfer degrades."""
+        if req in remaining[i]:
+            # routed but never ingested: nothing on replica i to move
+            remaining[i].remove(req)
+            self._assigned[i].remove(req)
+            j = self._prefix_target(req)
+            self._place(j, req, remaining)
+            return
+        self._assigned[i].remove(req)
+        j = self._prefix_target(req)
+        plan = self.faults
+        self.migrations_attempted += 1
+        res = migrate(
+            self.engines[i], self.engines[j], req, start,
+            self.fleet.migration, plan,
+            src_kill=plan.kill_time(i) if plan else None,
+            dst_kill=plan.kill_time(j) if plan else None)
+        self.migration_retries += res.retries
+        self.migrated_pages += res.pages_imported
+        self.deduped_pages += res.pages_deduped
+        if res.status == "aborted_target_dead":
+            # nothing landed on j (it is about to crash): send the
+            # request to the next-best replica instead, plain re-prefill
+            self.migration_fallbacks += 1
+            pool = [k for k in self._redispatch_pool() if k != j] or \
+                self._redispatch_pool()
+            j = max(pool, key=lambda k: (
+                self.engines[k].allocator.match_prefix(
+                    req.content_chunks(),
+                    max(req.prompt_tokens - 1, 0)).tokens,
+                -self._load[k]))
+        elif res.status == "migrated":
+            self.migrations_succeeded += 1
+        elif res.status == "fallback" and res.chunks_sent == 0:
+            # empty manifest — the request had no transferable pages yet
+            # (still queued / barely prefilled): a plain re-dispatch, not
+            # a protocol degradation
+            self.migration_noops += 1
+        else:
+            self.migration_fallbacks += 1
+        self.migrations_out[i] += 1
+        self.migrations_in[j] += 1
+        self._place(j, req, remaining)
+
+    def _place(self, j: int, req: Request, remaining) -> None:
+        self._load[j] += req.est_prefill
+        remaining[j].append(req)
+        remaining[j].sort(key=lambda r: r.arrival)
+        self._assigned[j].append(req)
+
+    # -- drains ---------------------------------------------------------
+    def _start_drain(self, i: int, remaining, when: float) -> None:
+        self.replica_state[i] = ReplicaState.DRAINING
+        self._drain_started[i] = when
+        eng = self.engines[i]
+        moved = 0
+        for req in list(self._assigned[i]):
+            if req.is_terminal:
+                continue
+            if req.state.value == "running":
+                continue             # decodes finish in place
+            self._move_request(i, req, remaining, max(eng.now, when))
+            moved += 1
+        self.health_events.append(
+            {"time": when, "replica": i, "state": "draining"})
+        self._drain_moved = getattr(self, "_drain_moved", {})
+        self._drain_moved[i] = moved
+
+    def _finish_drain(self, i: int, remaining) -> None:
+        eng = self.engines[i]
+        self.alive[i] = False
+        self.replica_state[i] = ReplicaState.DEAD
+        start = self._drain_started[i]
+        self.drain_events.append({
+            "replica": i, "start": start, "end": eng.now,
+            "duration": max(0.0, eng.now - start),
+            "migrated": getattr(self, "_drain_moved", {}).get(i, 0)})
+
+    def _tick_drains(self, pending, remaining, clk) -> None:
+        for i, t in self.fleet.drains.items():
+            eng = self.engines[i]
+            if not self.alive[i]:
+                continue
+            if self.replica_state[i] is not ReplicaState.DRAINING:
+                nxt = self._next_arrival(i, pending, remaining)
+                if eng.now >= t or (clk is not None and clk >= t) or \
+                        (eng.idle and (nxt is None or nxt > t)):
+                    self._start_drain(i, remaining, max(eng.now, t))
+            # completion is checked in the same tick a drain starts: a
+            # replica drained while already idle leaves the fleet now,
+            # not on a later tick that may never come
+            if self.replica_state[i] is ReplicaState.DRAINING and \
+                    eng.idle and not remaining[i] and all(
+                        r.is_terminal for r in self._assigned[i]):
+                self._finish_drain(i, remaining)
+
+    # -- health ---------------------------------------------------------
+    def _tick_health(self, remaining) -> None:
+        cfg = self.fleet
+        frontier = max((e.now for e, a in zip(self.engines, self.alive)
+                        if a), default=0.0)
+        for i, eng in enumerate(self.engines):
+            st = self.replica_state[i]
+            if st in (ReplicaState.DRAINING, ReplicaState.DEAD):
+                continue
+            backlog = (len(remaining[i]) + len(eng.queues) +
+                       len(eng.encode_queues) + len(eng.prefilling) +
+                       len(eng.running))
+            bad = (
+                (eng.ladder is not None and
+                 eng.ladder.level >= cfg.degraded_ladder_level)
+                or backlog >= cfg.degraded_backlog
+                or (backlog > 0 and
+                    frontier - eng.now >= cfg.degraded_lag_s))
+            if bad:
+                self._health_bad[i] += 1
+                self._health_good[i] = 0
+            else:
+                self._health_good[i] += 1
+                self._health_bad[i] = 0
+            if st is ReplicaState.HEALTHY and \
+                    self._health_bad[i] >= cfg.health_window:
+                self.replica_state[i] = ReplicaState.DEGRADED
+                self.health_events.append(
+                    {"time": eng.now, "replica": i, "state": "degraded"})
+            elif st is ReplicaState.DEGRADED and \
+                    self._health_good[i] >= cfg.health_window:
+                self.replica_state[i] = ReplicaState.HEALTHY
+                self.health_events.append(
+                    {"time": eng.now, "replica": i, "state": "healthy"})
+
+    # -- kill override ---------------------------------------------------
+    def _kill(self, i: int, remaining) -> None:
+        self.replica_state[i] = ReplicaState.DEAD
+        super()._kill(i, remaining)
+
+    # -- stepped co-sim hooks --------------------------------------------
+    def _live_clock(self, remaining) -> float | None:
+        live = [j for j in range(len(self.engines)) if self.alive[j]
+                and (not self.engines[j].idle or remaining[j])]
+        if not live:
+            return None
+        return min(self.engines[j].now for j in live)
+
+    def _next_arrival(self, i, pending, remaining):
+        nxt = super()._next_arrival(i, pending, remaining)
+        if pending:
+            p = pending[0].arrival
+            nxt = p if nxt is None else min(nxt, p)
+        return nxt
+
+    def _dispatch_arrivals(self, reqs_sorted, remaining):
+        # defer routing to arrival time: elastic repartitions (and
+        # drains/health) must be able to steer traffic mid-run
+        return list(reqs_sorted)
+
+    def _fleet_tick(self, pending, remaining):
+        clk = self._live_clock(remaining)
+        if self.fleet.drains:
+            self._tick_drains(pending, remaining, clk)
+            clk = self._live_clock(remaining)
+        self._tick_health(remaining)
+        # route every arrival the co-sim frontier has reached; the clock
+        # is recomputed per route because routing to a lagging idle
+        # replica can pull the frontier back
+        while pending:
+            clk = self._live_clock(remaining)
+            if clk is None:
+                break                # no live engine: force-route below
+            if pending[0].arrival > clk:
+                break
+            self._admit(pending.pop(0), remaining, clk)
+        if pending and self._live_clock(remaining) is None:
+            if not any(self.alive):
+                self.lost.extend(pending)   # whole fleet is gone
+                return []
+            # fleet fully idle: route the next arrival so the co-sim can
+            # jump to it (mirrors the base router's idle-jump semantics)
+            req = pending.pop(0)
+            self._admit(req, remaining, req.arrival)
+        return pending
+
+    def _admit(self, req: Request, remaining, clk: float) -> None:
+        i = self._route(req)
+        remaining[i].append(req)
+        self._assigned[i].append(req)
+        if self.routing == "elastic":
+            self._maybe_repartition(remaining, max(clk, req.arrival))

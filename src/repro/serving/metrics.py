@@ -131,6 +131,59 @@ def summarize_tenants(reqs: list[Request],
     return out
 
 
+def summarize_fleet(fleet) -> dict:
+    """Per-replica fleet-tier counters (ISSUE 9): lifecycle state,
+    migrations attempted/succeeded/fallen-back, drain durations,
+    repartition and health-transition events — the operator's view of a
+    ``serving.fleet.Fleet`` run, surfaced in the fleet benchmark summary.
+    Works on a plain ``Router`` too (fleet-only fields read as zero)."""
+    n = len(fleet.engines)
+
+    def _per(attr, default=0):
+        v = getattr(fleet, attr, None)
+        return v if v is not None else [default] * n
+
+    states = getattr(fleet, "replica_state", None)
+    mig_out, mig_in = _per("migrations_out"), _per("migrations_in")
+    replicas = []
+    for i, eng in enumerate(fleet.engines):
+        replicas.append({
+            "replica": i,
+            "state": (states[i].value if states is not None
+                      else ("alive" if fleet.alive[i] else "dead")),
+            "alive": fleet.alive[i],
+            "clock": eng.now,
+            "finished": len(eng.finished),
+            "migrations_out": mig_out[i],
+            "migrations_in": mig_in[i],
+            "used_pages": eng.allocator.used_pages,
+            "pinned_encoder_entries": (
+                eng.encoder_cache.stats()["pinned"]
+                if eng.encoder_cache is not None else 0),
+        })
+    drains = getattr(fleet, "drain_events", [])
+    return {
+        "replicas": replicas,
+        "migrations": {
+            "attempted": getattr(fleet, "migrations_attempted", 0),
+            "succeeded": getattr(fleet, "migrations_succeeded", 0),
+            "fallbacks": getattr(fleet, "migration_fallbacks", 0),
+            "noops": getattr(fleet, "migration_noops", 0),
+            "retries": getattr(fleet, "migration_retries", 0),
+            "pages_transferred": getattr(fleet, "migrated_pages", 0),
+            "pages_deduped": getattr(fleet, "deduped_pages", 0),
+        },
+        "drain_events": drains,
+        "drain_duration_avg": (sum(d["duration"] for d in drains)
+                               / len(drains) if drains else 0.0),
+        "repartition_events": getattr(fleet, "repartition_events", []),
+        "health_events": getattr(fleet, "health_events", []),
+        "kill_events": fleet.kill_events,
+        "redispatched": fleet.redispatched,
+        "lost": len(fleet.lost),
+    }
+
+
 def rejection_mix(reqs: list[Request]) -> dict:
     """Rejected-request fractions by vehicle class: of all offered
     requests in a class, what share was refused at admission.  The

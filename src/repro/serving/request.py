@@ -108,6 +108,13 @@ class Request:        # engine's running/prefilling sets (rids are unique)
     encode_faults: int = 0          # injected encoder-chunk failures seen
     step_faults: int = 0            # executor-step retries charged to it
     redispatches: int = 0           # replica-failover re-dispatch count
+    # ---- fleet tier / migration (ISSUE 9) ----
+    migrations: int = 0             # live page-chain migrations survived
+    ready_floor: float = 0.0        # earliest admissible time on the target
+    #                                 replica: a migrated request only
+    #                                 becomes schedulable once its chain
+    #                                 transfer completes (absolute seconds;
+    #                                 0.0 = no hold, the bit-exact default)
     _chunks_cache: tuple | None = None  # memoized content_chunks()
 
     @property
@@ -138,6 +145,7 @@ class Request:        # engine's running/prefilling sets (rids are unique)
         self.error = None
         self.preempted_at = None
         self.encode_faults = 0
+        self.ready_floor = 0.0   # migration may re-apply a transfer hold
         if self.slo_from_engine:
             self.slo = float("inf")
             self.slo_from_engine = False

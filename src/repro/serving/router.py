@@ -107,10 +107,16 @@ class Router:
             return i
         raise ValueError(self.routing)
 
+    def _redispatch_pool(self) -> list[int]:
+        """Replicas eligible to receive re-dispatched/migrated work.
+        The base router accepts any alive replica; the fleet tier
+        (serving/fleet.py) also excludes draining ones."""
+        return [j for j in range(len(self.engines)) if self.alive[j]]
+
     def _prefix_target(self, req: Request) -> int:
-        """Alive replica whose KV prefix cache matches the most tokens of
-        this request's content (ties break toward the least-loaded)."""
-        pool = [j for j in range(len(self.engines)) if self.alive[j]]
+        """Eligible replica whose KV prefix cache matches the most tokens
+        of this request's content (ties break toward the least-loaded)."""
+        pool = self._redispatch_pool()
         limit = max(req.prompt_tokens - 1, 0)
         return max(pool, key=lambda j: (
             self.engines[j].allocator.match_prefix(
@@ -142,6 +148,12 @@ class Router:
         remaining[i] = []
         moved = 0
         for req in inflight:
+            # release the dead engine's side of the request exactly once
+            # (queue slots, KV pages, encoder-cache pins, executor memos)
+            # BEFORE resetting it — a crashed replica's caches must audit
+            # clean (zero pins, zero used pages), and ENCODING requests
+            # otherwise leaked their encoder pin forever (ISSUE 9)
+            eng.export_request(req)
             req.reset_for_redispatch()
             if not any(self.alive):
                 self.lost.append(req)
@@ -157,6 +169,36 @@ class Router:
         self.kill_events.append(
             {"replica": i, "time": eng.now, "redispatched": moved})
 
+    # -- stepped co-simulation hooks (overridden by serving/fleet.py) --
+    def _dispatch_arrivals(self, reqs_sorted: list[Request],
+                           remaining: list[list[Request]]) -> list[Request]:
+        """Route the (arrival-sorted) workload into per-replica pending
+        lists. The base router routes everything up-front and keeps no
+        deferred pool; the fleet tier defers routing to arrival time so
+        elastic repartitions can steer traffic mid-run. Returns the
+        not-yet-routed tail (always empty here)."""
+        for req in reqs_sorted:
+            i = self._route(req)
+            remaining[i].append(req)
+            self._assigned[i].append(req)
+        return []
+
+    def _fleet_tick(self, pending: list[Request],
+                    remaining: list[list[Request]]) -> list[Request]:
+        """Per-outer-step fleet-tier hook (deferred routing, drains,
+        health scoring, elastic repartitioning). No-op in the base
+        router — which is exactly what keeps the fleet tier's
+        no-events timeline bit-identical to this one."""
+        return pending
+
+    def _next_arrival(self, i: int, pending: list[Request],
+                      remaining: list[list[Request]]) -> float | None:
+        """Earliest arrival that could still reach replica ``i`` (the
+        idle-victim kill check must not let an idle clock jump a
+        scheduled crash). The fleet tier also counts unrouted pending
+        arrivals, any of which might route here."""
+        return remaining[i][0].arrival if remaining[i] else None
+
     def run_stepped(self, requests: list[Request],
                     max_steps: int = 2_000_000) -> list[Request]:
         """Co-simulate all replicas step-by-step on one timeline: each
@@ -167,11 +209,10 @@ class Router:
         would otherwise jump the crash)."""
         n = len(self.engines)
         remaining: list[list[Request]] = [[] for _ in range(n)]
-        for req in sorted(requests, key=lambda r: r.arrival):
-            i = self._route(req)
-            remaining[i].append(req)
-            self._assigned[i].append(req)
+        pending = self._dispatch_arrivals(
+            sorted(requests, key=lambda r: r.arrival), remaining)
         for _ in range(max_steps):
+            pending = self._fleet_tick(pending, remaining)
             if self.faults is not None:
                 for i, eng in enumerate(self.engines):
                     if not self.alive[i]:
@@ -179,7 +220,7 @@ class Router:
                     kt = self.faults.kill_time(i)
                     if kt is None:
                         continue
-                    nxt = remaining[i][0].arrival if remaining[i] else None
+                    nxt = self._next_arrival(i, pending, remaining)
                     if eng.now >= kt or (eng.idle and
                                          (nxt is None or nxt > kt)):
                         self._kill(i, remaining)

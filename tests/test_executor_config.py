@@ -2,8 +2,8 @@
 
 Covers field validation, the single-point num_pages resolution (the
 constructor and ``build_stack`` previously each re-derived the slot-
-geometry default), and the one-release deprecation shim for the old
-bare-kwarg construction."""
+geometry default), and the post-deprecation removal of the old
+bare-kwarg construction (now a ``TypeError`` with the migration path)."""
 import pytest
 
 from repro.serving.executors import ExecutorConfig, ModelExecutor
@@ -63,13 +63,14 @@ def test_build_stack_and_executor_agree_without_explicit_kv_pages():
     assert engine_cfg.kv_pages == executor.config.num_pages
 
 
-# ---------------- deprecation shim -------------------------------------------
+# ---------------- bare-kwargs removal (post-deprecation) ---------------------
 
-def test_bare_kwargs_still_work_with_deprecation_warning():
-    with pytest.warns(DeprecationWarning, match="ExecutorConfig"):
-        ex = ModelExecutor(_cfg(), max_slots=2, max_len=64, num_pages=24)
-    assert ex.max_slots == 2 and ex.max_len == 64
-    assert ex.capacity_pages == 24
+def test_bare_kwargs_removed_raises_with_migration_path():
+    """The PR 7 one-release deprecation window is over: bare-kwargs
+    construction now fails loudly, and the message spells out the
+    ExecutorConfig call to write instead."""
+    with pytest.raises(TypeError, match=r"ExecutorConfig\(.*max_slots"):
+        ModelExecutor(_cfg(), max_slots=2, max_len=64, num_pages=24)
 
 
 def test_config_path_emits_no_deprecation_warning():
@@ -80,6 +81,6 @@ def test_config_path_emits_no_deprecation_warning():
 
 
 def test_config_and_kwargs_together_rejected():
-    with pytest.raises(TypeError, match="not both"):
+    with pytest.raises(TypeError, match="keyword arguments"):
         ModelExecutor(_cfg(), ExecutorConfig(max_slots=2, max_len=64),
                       max_slots=4)

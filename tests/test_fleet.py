@@ -1,0 +1,376 @@
+"""Fleet tier + page-chain migration (ISSUE 9): replica lifecycle,
+graceful drain, elastic repartitioning, and the chunked KV-transfer
+protocol (manifest = trie path, per-page checksums, retry-with-backoff,
+fallback to residual re-prefill).
+
+Central properties:
+  * with no fleet events scheduled, ``Fleet.run_stepped`` is bit-exact
+    with ``Router.run_stepped``;
+  * any sampled migration fault schedule conserves pages and pins
+    fleet-wide and leaves every request in exactly one terminal state on
+    exactly one replica (the hypothesis property);
+  * a replica killed mid-ENCODING releases its encoder-cache pin exactly
+    once and the request finishes on a survivor (the ``_kill`` fix).
+"""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import sim_stack_cached
+from repro.serving.engine import EngineConfig
+from repro.serving.executors import SimExecutor, make_cost_model
+from repro.serving.faults import FaultPlan, FaultRates
+from repro.serving.fleet import Fleet, FleetConfig, ReplicaState
+from repro.serving.metrics import lifecycle_counts, summarize_fleet
+from repro.serving.migration import (MigrationConfig, PageRecord,
+                                     migrate, record_checksum,
+                                     simulate_transfer)
+from repro.serving.request import Modality, Request, State
+from repro.serving.router import Router
+from repro.serving.workload import WorkloadConfig, generate
+
+POLICY = "tcm"
+
+
+def _wl(n=40, seed=0, **kw):
+    kw.setdefault("duplicate_prob", 0.3)
+    kw.setdefault("shared_prefix_prob", 0.3)
+    kw.setdefault("rate", 3.0)
+    return generate(WorkloadConfig(mix="MH", num_requests=n,
+                                   seed=seed, **kw))
+
+
+def _mk(cls, n=2, plan=None, routing="least-loaded", cfg_kw=None, **kw):
+    _ex, classifier, _cfg, _prof, _est = sim_stack_cached()
+    cm = make_cost_model("llava-7b")
+    cfg = dict(kv_pages=2048, token_budget=512)
+    cfg.update(cfg_kw or {})
+    return cls([SimExecutor(cm) for _ in range(n)], classifier,
+               EngineConfig(**cfg),
+               policy=POLICY, routing=routing, faults=plan, **kw)
+
+
+def _snapshot(reqs):
+    return {r.rid: (r.state.value, r.finish_time, r.first_token_time,
+                    r.decoded, r.preemptions, r.cached_prefix_tokens)
+            for r in reqs}
+
+
+def _assert_fleet_clean(router, reqs):
+    """Fleet-wide conservation: every engine (alive, drained, or dead)
+    audits zero leaked pages and pins; the workload partitions into
+    terminal states; no request finishes on two replicas."""
+    for eng in router.engines:
+        eng.allocator.check_invariants()
+        assert eng.allocator.used_pages == 0
+        if eng.encoder_cache is not None:
+            stats = eng.encoder_cache.stats()
+            assert stats["pin_refs"] == 0 and stats["pinned"] == 0
+        assert eng._enc_pins == {}
+    counts = lifecycle_counts(reqs)
+    assert counts["in_flight"] == 0
+    assert (counts["finished"] + counts["rejected"] + counts["failed"]
+            + counts["cancelled"]) == len(reqs)
+    finished = [r.rid for eng in router.engines for r in eng.finished]
+    assert len(finished) == len(set(finished))
+    assert not router.lost
+
+
+# ---------------- transfer protocol units ------------------------------------
+
+
+def _records(n, payload=False):
+    return [PageRecord(i, ((f"mm:v{i // 4}", (i % 4) * 16, 16),), 16,
+                       bytes(range(16)) if payload else None).seal()
+            for i in range(n)]
+
+
+def test_checksum_covers_identity_and_payload():
+    a = _records(1, payload=True)[0]
+    b = PageRecord(a.index, a.runs, a.tokens,
+                   bytes([a.payload[0] ^ 1]) + a.payload[1:]).seal()
+    assert record_checksum(a) == a.checksum
+    assert b.checksum != a.checksum           # payload flip changes it
+    c = PageRecord(a.index + 1, a.runs, a.tokens, a.payload).seal()
+    assert c.checksum != a.checksum           # chain position changes it
+
+
+def test_clean_transfer_delivers_everything_in_order():
+    man = _records(20)
+    cfg = MigrationConfig(chunk_pages=8)
+    res = simulate_transfer(man, "r1", 10.0, cfg)
+    assert res.status == "migrated"
+    assert [r.index for r in res.delivered] == list(range(20))
+    assert res.retries == 0
+    assert res.chunks_sent == 3               # ceil(20 / 8)
+    assert res.finish_time > 10.0
+
+
+def test_transient_faults_retry_then_deliver():
+    man = _records(16)
+    cfg = MigrationConfig(chunk_pages=8, max_retries=3)
+    plan = FaultPlan(migration_faults={("r1", 0): ("timeout", 1),
+                                      ("r1", 1): ("corrupt", 2)})
+    res = simulate_transfer(man, "r1", 0.0, cfg, plan)
+    assert res.status == "migrated"
+    assert len(res.delivered) == 16
+    assert res.retries == 3
+    assert plan.injected["mig_timeout"] == 1
+    assert plan.injected["mig_corrupt"] == 2
+    # faults cost time: slower than the clean run of the same chain
+    clean = simulate_transfer(_records(16), "r1", 0.0, cfg)
+    assert res.finish_time > clean.finish_time
+
+
+def test_permanent_fault_degrades_to_verified_prefix():
+    man = _records(24)
+    cfg = MigrationConfig(chunk_pages=8, max_retries=2)
+    plan = FaultPlan(migration_faults={("r1", 1): ("corrupt", 10 ** 6)})
+    res = simulate_transfer(man, "r1", 0.0, cfg, plan)
+    assert res.status == "fallback"
+    assert [r.index for r in res.delivered] == list(range(8))  # chunk 0
+    assert res.retries == cfg.max_retries + 1
+
+
+def test_source_death_keeps_verified_prefix_target_death_aborts():
+    man = _records(24)
+    cfg = MigrationConfig(chunk_pages=8, chunk_latency_s=1.0,
+                          bandwidth_pages_per_s=8.0)   # 2s per chunk
+    res = simulate_transfer(man, "r1", 0.0, cfg, src_kill=3.0)
+    assert res.status == "aborted_source_dead"
+    assert len(res.delivered) == 8            # one chunk landed before 3s
+    res2 = simulate_transfer(man, "r1", 0.0, cfg, dst_kill=3.0)
+    assert res2.status == "aborted_target_dead"
+    assert len(res2.delivered) == 8           # delivered but never applied
+
+
+def test_corrupt_chunk_never_installs():
+    """A corrupted record's checksum genuinely fails verification — the
+    chunk is re-requested, not installed."""
+    man = _records(8, payload=True)
+    plan = FaultPlan(migration_faults={("r1", 0): ("corrupt", 1)})
+    res = simulate_transfer(man, "r1", 0.0, MigrationConfig(), plan)
+    assert res.status == "migrated"
+    for rec in res.delivered:                 # retry delivered clean copies
+        assert record_checksum(rec) == rec.checksum
+
+
+# ---------------- end-to-end migration between sim engines -------------------
+
+
+def _video(rid, arrival=0.0, mm_hash=None, out=8):
+    return Request(rid=rid, modality=Modality.VIDEO, arrival=arrival,
+                   text_tokens=32, mm_units=784, prompt_tokens=816,
+                   output_tokens=out, mm_hash=mm_hash or f"vid-{rid}")
+
+
+def test_migrate_moves_chain_and_finishes_on_target():
+    router = _mk(Router, n=2)
+    src, dst = router.engines
+    req = _video("m1", out=64)
+    pending = [req]
+    for _ in range(200):
+        pending = src.step(pending)
+        if req.state is State.RUNNING:
+            break
+    assert req.state is State.RUNNING and req.prefilled == 816
+    res = migrate(src, dst, req, src.now, MigrationConfig())
+    assert res.status == "migrated"
+    # 784 mm tokens = 49 full shareable pages; the txt!rid tail is private
+    assert res.pages_imported == 49
+    assert req.ready_floor == res.finish_time > 0.0
+    assert req.migrations == 1 and req.redispatches == 1
+    # source fully released, exactly once
+    src.allocator.check_invariants()
+    assert src.allocator.used_pages == 0
+    assert src._enc_pins == {}
+    # target holds the chain as cached/evictable content until claimed
+    dst.allocator.check_invariants()
+    assert dst.allocator.prefix_stats()["imported_pages"] == 49
+    assert dst.allocator.used_pages == 0
+    remaining = [req]
+    for _ in range(2000):
+        remaining = dst.step(remaining)
+        if req.is_terminal:
+            break
+    assert req.state is State.FINISHED
+    assert req.cached_prefix_tokens >= 49 * 16   # re-claimed the chain
+    assert req.first_token_time >= res.finish_time  # transfer hold held
+    _assert_fleet_clean(router, [req])
+
+
+def test_migrate_fallback_still_finishes_correctly():
+    """Retries exhausted on chunk 0: nothing transfers, the request
+    redispatches plainly and re-prefills everything on the target —
+    correctness preserved, only latency paid."""
+    plan = FaultPlan(migration_faults={
+        ("m2", c): ("timeout", 10 ** 6) for c in range(16)})
+    router = _mk(Router, n=2, plan=None)
+    src, dst = router.engines
+    req = _video("m2")
+    pending = [req]
+    for _ in range(200):
+        pending = src.step(pending)
+        if req.state is State.RUNNING:
+            break
+    res = migrate(src, dst, req, src.now, MigrationConfig(), plan)
+    assert res.status == "fallback" and not res.delivered
+    assert req.ready_floor == 0.0 and req.migrations == 0
+    assert src.allocator.used_pages == 0
+    remaining = [req]
+    for _ in range(2000):
+        remaining = dst.step(remaining)
+        if req.is_terminal:
+            break
+    assert req.state is State.FINISHED
+    assert req.cached_prefix_tokens == 0      # honest full re-prefill
+    _assert_fleet_clean(router, [req])
+
+
+def test_migrate_dedups_against_target_cache():
+    """Target already serves the same video: the chain positions dedup
+    against its trie instead of double-allocating."""
+    router = _mk(Router, n=2)
+    src, dst = router.engines
+    # two duplicates make the content popular enough to publish its chain
+    a1 = _video("d1", mm_hash="shared-vid")
+    a2 = _video("d1b", arrival=0.01, mm_hash="shared-vid")
+    dst.run([a1, a2])
+    assert a1.state is State.FINISHED
+    assert dst.allocator.prefix_stats()["cached_pages"] >= 49
+    b = _video("d2", mm_hash="shared-vid")
+    pending = [b]
+    for _ in range(200):
+        pending = src.step(pending)
+        if b.state is State.RUNNING:
+            break
+    res = migrate(src, dst, b, src.now, MigrationConfig())
+    assert res.status == "migrated"
+    assert res.pages_deduped == 49 and res.pages_imported == 0
+
+
+# ---------------- satellite: ENCODING-kill pin release -----------------------
+
+
+def test_kill_during_encoding_releases_pin_once_and_fails_over():
+    # small encode budget: the 784-unit video stays ENCODING across steps
+    router = _mk(Router, n=2, cfg_kw=dict(encode_budget=64))
+    eng = router.engines[0]
+    req = _video("enc1", out=8)
+    remaining = [[req], []]
+    router._assigned[0].append(req)
+    for _ in range(100):
+        remaining[0] = eng.step(remaining[0])
+        if req.state is State.ENCODING:
+            break
+    assert req.state is State.ENCODING
+    assert eng.encoder_cache.stats()["pin_refs"] == 1
+    assert req.rid in eng._enc_pins
+    router._kill(0, remaining)
+    # the dead replica's encoder pin was released exactly once
+    assert eng.encoder_cache.stats()["pin_refs"] == 0
+    assert eng.encoder_cache.stats()["pinned"] == 0
+    assert eng._enc_pins == {}
+    eng.allocator.check_invariants()
+    assert eng.allocator.used_pages == 0
+    # and the request restarts (and re-pins) on the survivor
+    assert req in remaining[1] and req.state is State.WAITING
+    survivor = router.engines[1]
+    for _ in range(2000):
+        remaining[1] = survivor.step(remaining[1])
+        if req.is_terminal:
+            break
+    assert req.state is State.FINISHED
+    assert survivor.encoder_cache.stats()["pin_refs"] == 0
+    _assert_fleet_clean(router, [req])
+
+
+# ---------------- fleet: bit-exactness, drains, elastic ----------------------
+
+
+def test_fleet_no_events_bit_exact_with_router():
+    for routing in ("least-loaded", "round-robin", "truck-isolation"):
+        reqs_a = _wl(40, seed=21)
+        reqs_b = _wl(40, seed=21)
+        base = _mk(Router, n=3, routing=routing)
+        base.run_stepped(reqs_a)
+        fleet = _mk(Fleet, n=3, routing=routing, fleet=FleetConfig())
+        fleet.run_stepped(reqs_b)
+        assert _snapshot(reqs_a) == _snapshot(reqs_b), routing
+        # and per-replica placement matched too
+        for ea, eb in zip(base.engines, fleet.engines):
+            assert {r.rid for r in ea.finished} == \
+                {r.rid for r in eb.finished}
+
+
+def test_drain_migrates_queue_and_finishes_decodes_in_place():
+    fleet = _mk(Fleet, n=3, fleet=FleetConfig(drains={0: 3.0}))
+    reqs = _wl(40, seed=22)
+    fleet.run_stepped(reqs)
+    assert fleet.replica_state[0] is ReplicaState.DEAD
+    assert not fleet.alive[0]
+    assert len(fleet.drain_events) == 1
+    ev = fleet.drain_events[0]
+    assert ev["replica"] == 0 and ev["duration"] >= 0.0
+    assert fleet.migrations_attempted + ev["migrated"] >= 0
+    # drained replica kept its decodes: it finished some work itself
+    _assert_fleet_clean(fleet, reqs)
+    fs = summarize_fleet(fleet)
+    assert fs["replicas"][0]["state"] == "dead"
+    assert fs["migrations"]["attempted"] == fleet.migrations_attempted
+
+
+def test_elastic_repartitions_under_mix_shift():
+    """Truck-heavy first half, text-only second half: the heavy group
+    must shrink (at least one repartition event) and everything still
+    completes cleanly."""
+    p1 = generate(WorkloadConfig(mix="LCV", num_requests=30, seed=23,
+                                 rate=4.0))
+    p2 = generate(WorkloadConfig(mix="T0", num_requests=60, seed=24,
+                                 rate=8.0))
+    off = max(r.arrival for r in p1) + 1.0
+    for r in p2:
+        r.rid = "p2" + r.rid
+        r._chunks_cache = None
+        r.arrival += off
+    reqs = sorted(p1 + p2, key=lambda r: r.arrival)
+    fleet = _mk(Fleet, n=4, routing="elastic",
+                truck_replicas=2,
+                fleet=FleetConfig(elastic_window=16, elastic_persist=4,
+                                  elastic_dwell_s=1.0))
+    fleet.run_stepped(reqs)
+    assert fleet.repartition_events
+    assert any(ev["direction"] == "shrink"
+               for ev in fleet.repartition_events)
+    _assert_fleet_clean(fleet, reqs)
+
+
+# ---------------- the fleet chaos property (satellite) -----------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       mig_timeout=st.floats(0.0, 0.4), mig_corrupt=st.floats(0.0, 0.4),
+       kill_t=st.floats(0.0, 15.0),     # < 1.0 means "no kill"
+       drain_t=st.floats(1.0, 15.0),
+       n_replicas=st.sampled_from([2, 3, 4]))
+def test_any_migration_fault_schedule_conserves_fleet_resources(
+        seed, mig_timeout, mig_corrupt, kill_t, drain_t, n_replicas):
+    """Whatever the sampled schedule does — chunk timeouts/corruptions at
+    any rate, a drain, an optional kill racing the drain's transfers —
+    pages and pins are conserved on every replica and each request lands
+    in exactly one terminal state on exactly one replica."""
+    rates = FaultRates(migration_timeout_prob=mig_timeout,
+                       migration_corrupt_prob=mig_corrupt)
+    # keep at least one untouched survivor: a schedule that removes the
+    # whole fleet trivially loses requests (covered elsewhere)
+    kills = ({n_replicas - 1: kill_t}
+             if kill_t >= 1.0 and n_replicas > 2 else {})
+    plan = FaultPlan(seed=seed, rates=rates, replica_kills=kills)
+    fleet = _mk(Fleet, n=n_replicas, plan=plan,
+                fleet=FleetConfig(
+                    drains={0: drain_t},
+                    migration=MigrationConfig(max_retries=2)))
+    reqs = _wl(40, seed=seed % 100)
+    fleet.run_stepped(reqs)
+    _assert_fleet_clean(fleet, reqs)
+    assert fleet.replica_state[0] is ReplicaState.DEAD
