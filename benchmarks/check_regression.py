@@ -42,6 +42,16 @@ blocking it:
     tokens over a non-empty transferred chain, elastic beats the
     static partition, and the event-free ``Fleet`` is a bit-exact
     no-op over ``Router``.
+  * ``BENCH_recovery.json`` — crash recovery. All gates exact and
+    wall-clock-free from a fresh fast run: zero invariant violations /
+    leaked pages / pins audited over every engine that ever served
+    (retired pre-restart engines included), exact terminal-state
+    partition across kill->restart->rejoin cycles and auto-drains,
+    every fired restart rejoined and the restart cycles did fresh
+    work, zero journal-replay mismatches (the lifecycle journal's
+    replayed accounting must equal the live allocator/engine state
+    bit-exactly), a goodput-recovery floor, and the journal-enabled
+    event-free run a bit-exact no-op over ``Router``.
   * ``BENCH_slo.json`` — overload control. Exact, wall-clock-free
     gates from a fresh fast sweep: zero leaks / exact terminal-state
     partition under sustained overload (with and without chaos), the
@@ -383,6 +393,44 @@ def check_fleet_baseline(failures: list[str]) -> None:
         failures.append("fleet/repartitions: mix shift never repartitioned")
 
 
+def check_recovery_baseline(failures: list[str]) -> None:
+    path = ROOT / "BENCH_recovery.json"
+    if not path.exists():
+        failures.append("BENCH_recovery.json missing - run "
+                        "`python -m benchmarks.run --only recovery`")
+        return
+    json.loads(path.read_text())  # baseline must at least parse
+    from benchmarks.recovery import measure
+    fresh = measure(fast=True)
+    gates = fresh["gates"]
+    exact_zero = ["invariant_violations", "leaked_pages", "leaked_pins",
+                  "in_flight", "lost", "double_finished",
+                  "journal_mismatches"]
+    for name in exact_zero:
+        got = gates[name]
+        status = "ok" if got == 0 else "REGRESSION"
+        print(f"  recovery/{name}: {got}  [{status}]")
+        if status != "ok":
+            failures.append(f"recovery/{name}: {got} != 0")
+    if gates["journal_checks"] <= 0:
+        failures.append("recovery/journal_checks: no replay cross-check "
+                        "ever ran")
+    if gates["rejoin_events"] != gates["restarts_fired"] or \
+            gates["restarts_fired"] < 3:
+        failures.append(
+            f"recovery/restarts: {gates['rejoin_events']} rejoins of "
+            f"{gates['restarts_fired']} fired")
+    if gates["post_restart_finished"] <= 0:
+        failures.append("recovery/post_restart: no restarted engine did "
+                        "fresh work")
+    if not gates["journal_identity"]:
+        failures.append("recovery/journal_identity: journal-enabled "
+                        "event-free run diverged from Router")
+    if gates["recovery_ratio"] < 0.5:
+        failures.append(f"recovery/goodput ratio "
+                        f"{gates['recovery_ratio']:.2f} < 0.5")
+
+
 def main(argv: list[str]) -> int:
     failures: list[str] = []
     print("== perf regression gate ==")
@@ -390,6 +438,7 @@ def main(argv: list[str]) -> int:
     check_prefix_baseline(failures)
     check_faults_baseline(failures)
     check_fleet_baseline(failures)
+    check_recovery_baseline(failures)
     check_slo_baseline(failures)
     check_executor_baseline(failures,
                             skip_wallclock="--skip-wallclock" in argv)

@@ -3,8 +3,10 @@ repartitioning and page-chain migration under diurnal/bursty traffic.
 
 Four experiments, all seeded (``--seed`` reproduces a CI failure):
 
-* **Fleet chaos** — a 4-8 replica elastic fleet at ~10x the failover
-  benchmark's request count, arrival stream shaped diurnal + bursty,
+* **Fleet chaos** — a 4-8 replica elastic fleet at ~100x the failover
+  benchmark's request count (24k requests in full mode, ISSUE 10),
+  arrival stream trace-shaped (heavy-tailed lengths, diurnal + bursty
+  arrivals, zipf-distributed tenants with shared system prompts),
   with a scheduled kill, scheduled drains, migration chunk faults
   (timeouts + corruptions) and a truck-heavy -> text-only mix shift that
   forces repartitions. Exact gates, audited fleet-wide *including*
@@ -62,25 +64,32 @@ MIG_RATES = dict(migration_timeout_prob=0.12, migration_corrupt_prob=0.08,
                  permanent_frac=0.05)
 
 
-def _shaped(mix: str, n: int, seed: int, rate: float) -> WorkloadConfig:
+def _shaped(mix: str, n: int, seed: int, rate: float,
+            trace: bool = False) -> WorkloadConfig:
     """Diurnal + bursty arrivals with duplicates/shared prefixes so
-    migrations dedup against target caches, not just fresh imports."""
-    return WorkloadConfig(mix=mix, rate=rate, num_requests=n, seed=seed,
-                          duplicate_prob=0.3, shared_prefix_prob=0.3,
-                          diurnal_amplitude=0.5, diurnal_period_s=120.0,
-                          burst_prob=0.02, burst_factor=4.0,
-                          burst_len_s=5.0)
+    migrations dedup against target caches, not just fresh imports.
+    ``trace=True`` adds the full trace shape (ISSUE 10): heavy-tailed
+    lengths and zipf-distributed tenants with shared system prompts."""
+    kw = dict(mix=mix, rate=rate, num_requests=n, seed=seed,
+              duplicate_prob=0.3, shared_prefix_prob=0.3,
+              diurnal_amplitude=0.5, diurnal_period_s=120.0,
+              burst_prob=0.02, burst_factor=4.0, burst_len_s=5.0)
+    if trace:
+        kw.update(heavy_tail_prob=0.02, heavy_tail_text_cap=8192,
+                  heavy_tail_out_cap=1024, tenants=8, tenant_zipf_a=1.2)
+    return WorkloadConfig(**kw)
 
 
-def _mix_shift_workload(n: int, seed: int) -> list[Request]:
+def _mix_shift_workload(n: int, seed: int,
+                        trace: bool = False) -> list[Request]:
     """Text flood (T0) first half, then a truck flood (LCV): the truck
     share of arriving work explodes mid-run. A static truck-isolation
     partition strands its light replicas while trucks queue on the heavy
     pair; an elastic fleet shrinks the heavy group during the text phase
     and grows it through the truck phase."""
     n1 = n // 2
-    p1 = generate(_shaped("T0", n1, seed, rate=12.0))
-    p2 = generate(_shaped("LCV", n - n1, seed + 1, rate=3.0))
+    p1 = generate(_shaped("T0", n1, seed, rate=12.0, trace=trace))
+    p2 = generate(_shaped("LCV", n - n1, seed + 1, rate=3.0, trace=trace))
     off = max(r.arrival for r in p1) + 1.0
     for r in p2:                      # workload rids restart at r00000
         r.rid = "p2" + r.rid
@@ -125,11 +134,12 @@ def _fleet_audit(router, reqs) -> dict:
 
 
 def run_fleet_chaos(n: int, seed: int, replicas: int) -> dict:
-    """The headline run: elastic fleet, mix-shift diurnal/bursty load,
-    one kill, scheduled drains, migration faults."""
+    """The headline run: elastic fleet, mix-shift trace-shaped load
+    (heavy tails + diurnal bursts + zipf tenants), one kill, scheduled
+    drains, migration faults."""
     _ex, _est, smart, _ = stack()
     cm = make_cost_model("llava-7b")
-    reqs = _mix_shift_workload(n, seed)
+    reqs = _mix_shift_workload(n, seed, trace=True)
     # schedule events off the arrival stream so they land mid-run at any
     # scale, inside the truck phase (second half) so the drains migrate
     # requests with real multi-page chains; the kill comes later and
@@ -288,8 +298,9 @@ def run_no_events_identity(n: int, seed: int, replicas: int = 4) -> dict:
 
 def measure(fast: bool = False) -> dict:
     seed = resolve_seed(DEFAULT_SEED)
-    # ~10x the failover benchmark's request count in full mode
-    chaos = run_fleet_chaos(n=360 if fast else 2400, seed=seed,
+    # ~100x the failover benchmark's request count in full mode
+    # (ISSUE 10: 10x the previous 2.4k chaos run, trace-shaped)
+    chaos = run_fleet_chaos(n=360 if fast else 24_000, seed=seed,
                             replicas=4 if fast else 6)
     parity = run_real_migration_parity()
     elastic = run_elastic_vs_static(240 if fast else 600, seed)

@@ -1,0 +1,352 @@
+"""Crash-recovery benchmark (ISSUE 10): kill -> restart -> rejoin cycles,
+journal-replay cross-checks, and health-scored auto-drain under
+trace-shaped load.
+
+Three experiments, all seeded (``--seed`` reproduces a CI failure):
+
+* **Recovery chaos** — a 4-6 replica fleet at ~10x the failover
+  benchmark's request count with every engine journaling: two scheduled
+  kills with injected restart delays, an operator drain whose replica
+  restarts on the fleet schedule, an auto-drain window so persistently
+  DEGRADED replicas drain themselves, and migration chunk faults during
+  warm imports. Exact gates audited fleet-wide *including* retired
+  (pre-restart) engines: zero allocator invariant violations, zero
+  leaked pages/pins, exact terminal-state partition (nothing lost,
+  nothing double-finished — a request that finished on a retired engine
+  counts exactly once), every scheduled restart rejoined, every
+  restarted slot did fresh work post-rejoin, and every journal replay
+  agreed with its engine's live accounting bit-exactly (zero mismatches
+  across every kill/drain checkpoint and the end-of-run sweep).
+* **RTO / goodput recovery** — recovery-time-objective percentiles
+  (rejoin minus death per restart event) and the chaos run's goodput as
+  a fraction of an event-free run of the same workload.
+* **Journal identity** — the journal is pure observation: an event-free
+  journal-enabled ``Fleet`` must produce the bit-exact per-request
+  timeline and per-replica placement of a journal-less ``Fleet`` AND of
+  the plain ``Router``.
+
+Full mode writes ``BENCH_recovery.json`` (the committed baseline checked
+by benchmarks/check_regression.py):
+
+    PYTHONPATH=src python -m benchmarks.run --only recovery [--fast]
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.serving.engine import EngineConfig
+from repro.serving.executors import SimExecutor, make_cost_model
+from repro.serving.faults import FaultPlan, FaultRates
+from repro.serving.fleet import Fleet, FleetConfig
+from repro.serving.metrics import (goodput, lifecycle_counts, summarize,
+                                   summarize_fleet)
+from repro.serving.router import Router
+from repro.serving.workload import WorkloadConfig, generate
+
+from .common import csv_row, resolve_seed, stack
+
+BASELINE_PATH = Path(__file__).resolve().parent.parent / \
+    "BENCH_recovery.json"
+
+POLICY = "tcm"
+DEFAULT_SEED = 11
+# warm-import transfers run under the same chunk-fault regime the fleet
+# benchmark uses, so the retry path is exercised on the rejoin critical
+# path too
+MIG_RATES = dict(migration_timeout_prob=0.12, migration_corrupt_prob=0.08,
+                 permanent_frac=0.05)
+
+
+def _traced(n: int, seed: int, rate: float) -> WorkloadConfig:
+    """PR 8 trace-shaped load: heavy-tailed lengths, diurnal + bursty
+    arrivals, zipf-distributed tenants with shared system prompts —
+    plus duplicates/shared prefixes so warm imports dedup."""
+    return WorkloadConfig(mix="MH", rate=rate, num_requests=n, seed=seed,
+                          duplicate_prob=0.3, shared_prefix_prob=0.3,
+                          heavy_tail_prob=0.02, heavy_tail_text_cap=8192,
+                          heavy_tail_out_cap=1024,
+                          diurnal_amplitude=0.5, diurnal_period_s=120.0,
+                          burst_prob=0.02, burst_factor=4.0,
+                          burst_len_s=5.0,
+                          tenants=8, tenant_zipf_a=1.2)
+
+
+def _recovery_audit(fleet, reqs) -> dict:
+    """Conservation audit over every engine that ever served — current
+    slots AND retired (pre-restart) engines."""
+    engines = list(fleet.engines) + [e for _i, e in fleet.retired]
+    violations = leaked_pages = leaked_pins = 0
+    for eng in engines:
+        try:
+            eng.allocator.check_invariants()
+        except AssertionError:
+            violations += 1
+        leaked_pages += eng.allocator.used_pages
+        if eng.encoder_cache is not None:
+            leaked_pins += eng.encoder_cache.stats()["pin_refs"]
+    counts = lifecycle_counts(reqs)
+    terminal_rids: list[str] = []
+    finished_rids: list[str] = []
+    for eng in engines:
+        for r in eng.finished:
+            finished_rids.append(r.rid)
+        for r in eng.finished + eng.rejected + eng.aborted:
+            terminal_rids.append(r.rid)
+    return {
+        "invariant_violations": violations,
+        "leaked_pages": leaked_pages,
+        "leaked_pins": leaked_pins,
+        "in_flight": counts["in_flight"],
+        "lost": (len(reqs) - sum(r.is_terminal for r in reqs)
+                 + len(fleet.lost) + len(fleet._orphans)),
+        "double_finished": (
+            (len(finished_rids) - len(set(finished_rids)))
+            + (len(terminal_rids) - len(set(terminal_rids)))),
+        "lifecycle": counts,
+    }
+
+
+def run_recovery_chaos(n: int, seed: int, replicas: int) -> dict:
+    """The headline run: journaled fleet under trace-shaped load with
+    two kill->restart cycles, an operator drain->restart, and an
+    auto-drain window."""
+    _ex, _est, smart, _ = stack()
+    cm = make_cost_model("llava-7b")
+    reqs = generate(_traced(n, seed, rate=8.0))
+    # events off arrival quantiles so they land mid-run at any scale:
+    # the kills leave enough tail traffic that the restarted slots do
+    # real work after their rejoin gates open
+    kill_a = reqs[int(n * 0.35)].arrival
+    kill_b = reqs[int(n * 0.50)].arrival
+    drain_t = reqs[int(n * 0.45)].arrival
+    span = max(r.arrival for r in reqs) - min(r.arrival for r in reqs)
+    delay = max(2.0, span * 0.02)
+    plan = FaultPlan(seed=seed, rates=FaultRates(**MIG_RATES),
+                     replica_kills={replicas - 1: kill_a,
+                                    replicas - 2: kill_b},
+                     restart_delays={replicas - 1: delay,
+                                     replicas - 2: delay * 1.5})
+    fleet = Fleet([SimExecutor(cm) for _ in range(replicas)], smart,
+                  EngineConfig(kv_pages=4096, token_budget=512,
+                               journal=True),
+                  policy=POLICY, routing="least-loaded", faults=plan,
+                  fleet=FleetConfig(
+                      drains={0: drain_t}, restarts={0: delay},
+                      restart_warmup_s=2.0, restart_warm_pages=256,
+                      auto_drain_window=200))
+    done = fleet.run_stepped(reqs)
+    audit = _recovery_audit(fleet, reqs)
+    summary = summarize(done)
+    restarted = {ev["replica"] for ev in fleet.restart_events}
+    rejoins = [ev for ev in fleet.health_events
+               if ev["state"] == "rejoined"]
+    rtos = [ev["rejoin_at"] - ev["died"] for ev in fleet.restart_events]
+    # fresh work on restarted engines: a slot's FIRST retired engine is
+    # the original; everything after it (and the current engine, if the
+    # slot restarted) was created by a restart — their finishes are the
+    # post-restart completions. A slot that rejoined after the workload
+    # tail legitimately finds nothing; the gate is that the restart
+    # cycles collectively did real work
+    by_slot: dict[int, list] = {}
+    for i, e in fleet.retired:
+        by_slot.setdefault(i, []).append(e)
+    post_restart = {
+        i: sum(len(e.finished)
+               for e in by_slot.get(i, [])[1:] + [fleet.engines[i]])
+        for i in restarted}
+    auto_drains = [d for d in fleet.drain_events if d["cause"] == "auto"]
+    return {
+        "replicas": replicas,
+        "requests": n,
+        "kill_times": [kill_a, kill_b],
+        "drain_time": drain_t,
+        "restart_delay_s": delay,
+        "injected": dict(plan.injected),
+        "fleet": summarize_fleet(fleet),
+        "goodput": goodput(reqs),
+        "ttft_avg": (summary["overall"]["ttft_avg"]
+                     if summary and summary["overall"] else None),
+        "restarted_replicas": sorted(restarted),
+        "restarts_fired": len(fleet.restart_events),
+        "rejoin_events": len(rejoins),
+        "auto_drains": len(auto_drains),
+        "rto_p50": float(np.percentile(rtos, 50)) if rtos else None,
+        "rto_p95": float(np.percentile(rtos, 95)) if rtos else None,
+        "post_restart_finished": post_restart,
+        "journal_checks": fleet.journal_checks,
+        "journal_mismatches": fleet.verify_journals(),
+        **audit,
+    }
+
+
+def run_goodput_recovery(n: int, seed: int, replicas: int,
+                         chaos_goodput: float) -> dict:
+    """Event-free run of the same trace-shaped workload (journal still
+    on): the chaos run's goodput as a fraction of it is the price of
+    the outages — restart/rejoin must claw most of it back."""
+    _ex, _est, smart, _ = stack()
+    cm = make_cost_model("llava-7b")
+    reqs = generate(_traced(n, seed, rate=8.0))
+    fleet = Fleet([SimExecutor(cm) for _ in range(replicas)], smart,
+                  EngineConfig(kv_pages=4096, token_budget=512,
+                               journal=True),
+                  policy=POLICY, routing="least-loaded",
+                  fleet=FleetConfig())
+    fleet.run_stepped(reqs)
+    base = goodput(reqs)
+    return {
+        "baseline_goodput": base,
+        "chaos_goodput": chaos_goodput,
+        "recovery_ratio": chaos_goodput / base if base > 0 else 0.0,
+        "journal_mismatches": fleet.verify_journals(),
+    }
+
+
+def run_journal_identity(n: int, seed: int, replicas: int = 4) -> dict:
+    """The journal must be pure observation: event-free Fleet with
+    journal on == Fleet with journal off == plain Router, bit-exactly
+    (per-request timeline AND per-replica placement)."""
+    _ex, _est, smart, _ = stack()
+
+    def _run(cls, journal, **kw):
+        cm = make_cost_model("llava-7b")
+        reqs = generate(_traced(n, seed, rate=4.0))
+        router = cls([SimExecutor(cm) for _ in range(replicas)], smart,
+                     EngineConfig(kv_pages=4096, token_budget=512,
+                                  journal=journal),
+                     policy=POLICY, routing="least-loaded", **kw)
+        router.run_stepped(reqs)
+        snap = {r.rid: (r.state.value, r.finish_time, r.first_token_time,
+                        r.decoded, r.preemptions, r.cached_prefix_tokens)
+                for r in reqs}
+        placement = [sorted(r.rid for r in eng.finished)
+                     for eng in router.engines]
+        return snap, placement, router
+
+    snap_r, place_r, _ = _run(Router, journal=False)
+    snap_off, place_off, _ = _run(Fleet, journal=False,
+                                  fleet=FleetConfig())
+    snap_on, place_on, fl = _run(Fleet, journal=True, fleet=FleetConfig())
+    return {
+        "identical": (snap_r == snap_off == snap_on
+                      and place_r == place_off == place_on),
+        "journal_records": sum(len(e.journal) for e in fl.engines),
+        "journal_mismatches": fl.verify_journals(),
+    }
+
+
+def measure(fast: bool = False) -> dict:
+    seed = resolve_seed(DEFAULT_SEED)
+    # ~10x the failover benchmark's kill count in full mode
+    chaos = run_recovery_chaos(n=360 if fast else 2400, seed=seed,
+                               replicas=4 if fast else 6)
+    recov = run_goodput_recovery(360 if fast else 2400, seed,
+                                 4 if fast else 6, chaos["goodput"])
+    identity = run_journal_identity(120 if fast else 400, seed)
+    gates = {
+        "invariant_violations": chaos["invariant_violations"],
+        "leaked_pages": chaos["leaked_pages"],
+        "leaked_pins": chaos["leaked_pins"],
+        "in_flight": chaos["in_flight"],
+        "lost": chaos["lost"],
+        "double_finished": chaos["double_finished"],
+        "journal_checks": chaos["journal_checks"],
+        "journal_mismatches": (len(chaos["journal_mismatches"])
+                               + len(recov["journal_mismatches"])
+                               + len(identity["journal_mismatches"])),
+        "restarts_fired": chaos["restarts_fired"],
+        "rejoin_events": chaos["rejoin_events"],
+        "auto_drains": chaos["auto_drains"],
+        "post_restart_finished": sum(
+            chaos["post_restart_finished"].values()),
+        "rto_positive": bool(chaos["rto_p50"] and chaos["rto_p50"] > 0),
+        "recovery_ratio": recov["recovery_ratio"],
+        "journal_identity": identity["identical"],
+    }
+    return {"seed": seed, "fast": fast, "mig_rates": dict(MIG_RATES),
+            "chaos": chaos, "recovery": recov, "identity": identity,
+            "gates": gates}
+
+
+def assert_gates(gates: dict) -> None:
+    assert gates["invariant_violations"] == 0, gates
+    assert gates["leaked_pages"] == 0, gates
+    assert gates["leaked_pins"] == 0, gates
+    assert gates["in_flight"] == 0, gates
+    assert gates["lost"] == 0, gates
+    assert gates["double_finished"] == 0, gates
+    assert gates["journal_checks"] > 0, \
+        "no journal-replay cross-check ever ran"
+    assert gates["journal_mismatches"] == 0, \
+        "journal replay diverged from live accounting"
+    assert gates["restarts_fired"] >= 3, \
+        "the scheduled kill/drain restart cycles never all fired"
+    assert gates["rejoin_events"] == gates["restarts_fired"], \
+        "a fired restart never rejoined"
+    assert gates["auto_drains"] >= 1, \
+        "the post-kill overload never triggered a health-scored auto-drain"
+    assert gates["post_restart_finished"] > 0, \
+        "no restarted engine ever did fresh work after its rejoin"
+    assert gates["rto_positive"], gates
+    assert gates["recovery_ratio"] >= 0.5, \
+        "restart/rejoin recovered less than half the event-free goodput"
+    assert gates["journal_identity"], \
+        "journal-enabled event-free run is no longer bit-exact"
+
+
+def main(fast: bool = False):
+    results = measure(fast=fast)
+    rows = []
+    ch = results["chaos"]
+    print(f"-- recovery chaos (seed {results['seed']}): {ch['replicas']} "
+          f"replicas, {ch['requests']} reqs, kills@"
+          f"{['%.1f' % t for t in ch['kill_times']]}, drain@"
+          f"{ch['drain_time']:.1f}s, restart delay "
+          f"{ch['restart_delay_s']:.1f}s --")
+    print(f"{'replica':>8}{'state':>10}{'finished':>9}{'journal':>9}"
+          f"{'pages':>6}{'pins':>5}")
+    for rep in ch["fleet"]["replicas"]:
+        print(f"{rep['replica']:>8}{rep['state']:>10}{rep['finished']:>9}"
+              f"{rep['journal_records']:>9}{rep['used_pages']:>6}"
+              f"{rep['pinned_encoder_entries']:>5}")
+    print(f"   restarts: {ch['restarts_fired']} fired, "
+          f"{ch['rejoin_events']} rejoined (slots "
+          f"{ch['restarted_replicas']}); {ch['auto_drains']} auto-drains; "
+          f"RTO p50 {ch['rto_p50']:.2f}s p95 {ch['rto_p95']:.2f}s; "
+          f"post-restart finishes {ch['post_restart_finished']}")
+    print(f"   journal: {ch['journal_checks']} replay cross-checks, "
+          f"{len(ch['journal_mismatches'])} mismatches; injected "
+          f"{ch['injected']}")
+    print(f"   goodput {ch['goodput']:.3f}  ttft {ch['ttft_avg']:.3f}  "
+          f"lost {ch['lost']}  double {ch['double_finished']}")
+    rec = results["recovery"]
+    print(f"-- goodput recovery: chaos {rec['chaos_goodput']:.3f} / "
+          f"event-free {rec['baseline_goodput']:.3f} = "
+          f"{rec['recovery_ratio']:.2f}")
+    ident = results["identity"]
+    print(f"-- journal identity: {ident['identical']} "
+          f"({ident['journal_records']} records)")
+    assert_gates(results["gates"])
+    print("-- all recovery gates green (zero leaks incl. retired engines "
+          "/ exact terminal partition / journal replay == live accounting "
+          "bit-exact / every restart rejoined & worked / journal-on "
+          "bit-exactness)")
+    rows.append(csv_row("recovery.rto_p50_s", ch["rto_p50"]))
+    rows.append(csv_row("recovery.rto_p95_s", ch["rto_p95"]))
+    rows.append(csv_row("recovery.goodput_ratio", rec["recovery_ratio"]))
+    rows.append(csv_row("recovery.journal_checks", ch["journal_checks"]))
+    rows.append(csv_row("recovery.restarts", len(
+        ch["fleet"]["restart_events"])))
+    if not fast:
+        BASELINE_PATH.write_text(json.dumps(results, indent=2,
+                                            default=str) + "\n")
+        print(f"wrote {BASELINE_PATH.name}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

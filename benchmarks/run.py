@@ -28,7 +28,7 @@ def main() -> None:
                    encode_overlap, estimator_accuracy, fault_tolerance,
                    fleet_tolerance, load_scaling,
                    memory_pressure, multi_replica, preemptions, prefix_cache,
-                   priority_curves, real_executor, roofline,
+                   priority_curves, real_executor, recovery, roofline,
                    scheduler_overhead, slo_attainment, slo_scales,
                    ttft_breakdown, workload_mix, workloads_tcm)
     common.SEED_OVERRIDE = args.seed
@@ -39,6 +39,7 @@ def main() -> None:
         ("prefix_cache", prefix_cache),
         ("fault_tolerance", fault_tolerance),
         ("fleet_tolerance", fleet_tolerance),
+        ("recovery", recovery),
         ("slo_attainment", slo_attainment),
         ("fig2_characterization", characterization),
         ("fig3_workload_mix", workload_mix),

@@ -217,6 +217,36 @@ class BlockAllocator:
     def ref_count(self, page: int) -> int:
         return self._ref.get(page, 0)
 
+    def owned_map(self) -> dict[str, tuple[int, ...]]:
+        """Live ownership snapshot: rid -> page tuple in block-table
+        order — what the lifecycle-journal replay oracle must reproduce
+        bit-exactly (serving/journal.py)."""
+        return {rid: tuple(ps) for rid, ps in self._owned.items() if ps}
+
+    def export_hot_chains(self, max_pages: int) -> list[list]:
+        """Hottest cached chains, for warming a restarted peer's trie:
+        one greedy path per root chain — root children hottest-first,
+        then the hottest child at every node — capped at ``max_pages``
+        pages total. Entries are ``(runs, tokens, page)`` in chain
+        order: the first two fields are the manifest shape
+        ``import_chain`` consumes (every trie node is a full page), the
+        third is where this allocator holds the payload."""
+        out: list[list] = []
+        budget = max_pages
+        for root in sorted(self._root.children.values(),
+                           key=lambda n: -n.tick):
+            if budget <= 0:
+                break
+            chain, node = [], root
+            while node is not None and budget > 0:
+                chain.append((node.runs, self.page_size, node.page))
+                budget -= 1
+                node = max(node.children.values(),
+                           key=lambda c: c.tick, default=None)
+            if chain:
+                out.append(chain)
+        return out
+
     # -- prefix cache: match / claim / publish ----------------------------
     def match_prefix(self, chunks, limit_tokens: int) -> PrefixMatch:
         """Longest cached prefix of a prompt, capped at ``limit_tokens``

@@ -47,6 +47,7 @@ from repro.cache import BlockAllocator, OutOfPages
 from repro.core.queues import QueueManager
 from repro.core.scheduler import SchedulerPolicy
 from repro.serving.encoder_cache import EncoderCache
+from repro.serving.journal import Journal
 from repro.serving.request import (TERMINAL_STATES, Request, State,
                                    VehicleClass)
 
@@ -112,6 +113,12 @@ class EngineConfig:
     # bit-identical historical path.
     admission: object | None = None   # AdmissionConfig
     brownout: object | None = None    # BrownoutConfig
+    # lifecycle journal (ISSUE 10): append-only log of every state
+    # transition and resource acquire/release, replayable into a second
+    # independent accounting oracle (serving/journal.py). Pure recording
+    # — no RNG, no clock reads the engine acts on — so a journal-enabled
+    # run stays bit-identical to the same run without it.
+    journal: bool = False
 
 
 @dataclass
@@ -201,6 +208,12 @@ class Engine:
             self.encode_queues.listener = self.encode_index
         self._victim_view = None
         self._victim_view_now = None
+        # lifecycle journal (ISSUE 10): every hook below is gated on
+        # ``journal is not None`` — one pointer check on the hot path
+        self.journal = Journal() if self.config.journal else None
+
+    def _jrec(self, kind: str, rid: str, data=None) -> None:
+        self.journal.record(self.now, kind, rid, data)
 
     # ------------------------------------------------------------------
     def _ingest(self, pending: list[Request], start: int = 0) -> int:
@@ -296,17 +309,23 @@ class Engine:
                     and req.mm_units > 0:
                 self.encoder_cache.pin(req.mm_hash)
                 self._enc_pins[req.rid] = req.mm_hash
+                if self.journal is not None:
+                    self._jrec("pin", req.rid, req.mm_hash)
             # multimodal requests encode before they can prefill; a cached
             # encoder output (same content hash) skips the stage entirely
             if req.mm_units > 0 and not self._encode_cached(req):
                 req.state = State.ENCODING
                 self.encode_queues.push(req, self.now)
+                if self.journal is not None:
+                    self._jrec("state", req.rid, State.ENCODING.value)
                 if self.faults is not None and \
                         self.faults.should_cancel(req, "encoding"):
                     self._abort(req, State.CANCELLED, "client cancel "
                                 "(encoding)")
             else:
                 self.queues.push(req, self.now)
+                if self.journal is not None:
+                    self._jrec("state", req.rid, State.WAITING.value)
                 if self.faults is not None and \
                         self.faults.should_cancel(req, "waiting"):
                     self._abort(req, State.CANCELLED, "client cancel "
@@ -330,6 +349,8 @@ class Engine:
         h = self._enc_pins.pop(req.rid, None)
         if h is not None and self.encoder_cache is not None:
             self.encoder_cache.unpin(h)
+        if h is not None and self.journal is not None:
+            self._jrec("unpin", req.rid, h)
 
     def _abort(self, req: Request, state: State, error: str) -> bool:
         """Move ``req`` to a terminal FAILED/CANCELLED/REJECTED state,
@@ -372,6 +393,9 @@ class Engine:
         self._unpin_encoder(req)
         (self.rejected if state is State.REJECTED
          else self.aborted).append(req)
+        if self.journal is not None:
+            self._jrec("release", req.rid)
+            self._jrec("terminal", req.rid, state.value)
         return True
 
     def cancel(self, req: Request, reason: str = "client cancel") -> bool:
@@ -423,6 +447,9 @@ class Engine:
             self._deadline_heap = [e for e in self._deadline_heap
                                    if e[2] is not req]
             heapq.heapify(self._deadline_heap)
+        if self.journal is not None:
+            self._jrec("release", req.rid)
+            self._jrec("export", req.rid)
         return True
 
     def _expire_deadlines(self) -> None:
@@ -550,6 +577,11 @@ class Engine:
                 req, claimed,
                 match.cow_src if cow_dst is not None else None, cow_dst)
         self.allocator.allocate(req.rid, tokens)
+        if self.journal is not None:
+            # claim_prefix asserted the block table was empty, so the
+            # post-allocate snapshot is exactly what this admission took
+            self._jrec("acquire", req.rid,
+                       tuple(self.allocator.pages_of(req.rid)))
         return True
 
     def _preempt(self, victim: Request) -> None:
@@ -573,6 +605,9 @@ class Engine:
         victim.prefilled = 0
         victim.state = State.PREEMPTED
         self.queues.push(victim, self.now)
+        if self.journal is not None:
+            self._jrec("release", victim.rid)
+            self._jrec("state", victim.rid, State.PREEMPTED.value)
         if self.faults is not None and \
                 self.faults.should_cancel(victim, "preempted"):
             # client disconnected in the preemption window: the victim's
@@ -616,6 +651,8 @@ class Engine:
             req.admit_time = self.now
         req.state = State.PREFILLING
         self.prefilling[req] = None
+        if self.journal is not None:
+            self._jrec("state", req.rid, State.PREFILLING.value)
         if self._victim_view is not None and \
                 self._victim_view_now == self.now:
             self._victim_view.add(req)
@@ -797,7 +834,9 @@ class Engine:
         a clear CapacityExceeded error instead — no victim can help, so
         none is punished either."""
         try:
-            self.allocator.allocate(req.rid, total_tokens)
+            fresh = self.allocator.allocate(req.rid, total_tokens)
+            if fresh and self.journal is not None:
+                self._jrec("acquire", req.rid, tuple(fresh))
             return True
         except OutOfPages:
             pass
@@ -819,7 +858,9 @@ class Engine:
         if victim is not None:
             self._preempt(victim)
             try:
-                self.allocator.allocate(req.rid, total_tokens)
+                fresh = self.allocator.allocate(req.rid, total_tokens)
+                if fresh and self.journal is not None:
+                    self._jrec("acquire", req.rid, tuple(fresh))
                 return True
             except OutOfPages:
                 pass
@@ -913,6 +954,8 @@ class Engine:
                     cache.insert(req.mm_hash, req.mm_units)
                 req.state = State.WAITING
                 self.queues.push(req, self.now)
+                if self.journal is not None:
+                    self._jrec("state", req.rid, State.WAITING.value)
                 if self.faults is not None and \
                         self.faults.should_cancel(req, "waiting"):
                     self._abort(req, State.CANCELLED, "client cancel "
@@ -950,6 +993,8 @@ class Engine:
                 req.state = State.RUNNING
                 del self.prefilling[req]
                 self.running[req] = None
+                if self.journal is not None:
+                    self._jrec("state", req.rid, State.RUNNING.value)
                 if self.prefix_on:
                     # the prompt KV is final (decode writes only past it):
                     # publish the page chain for later requests, truncated
@@ -1003,6 +1048,9 @@ class Engine:
                 self.executor.release_slot(req)
             self._unpin_encoder(req)
             self.finished.append(req)
+            if self.journal is not None:
+                self._jrec("release", req.rid)
+                self._jrec("terminal", req.rid, State.FINISHED.value)
         return start
 
     def step(self, pending: list[Request]) -> list[Request]:

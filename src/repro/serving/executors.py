@@ -149,6 +149,12 @@ class SimExecutor:
     def preprocess_delay(self, req: Request) -> float:
         return self.cm.preprocess_time(req)
 
+    def fresh(self) -> "SimExecutor":
+        """A cold executor of the same configuration — what a restarted
+        replica binds (ISSUE 10): same cost model, zeroed counters, no
+        per-request state (all of that died with the old process)."""
+        return SimExecutor(self.cm, overlap=self.overlap)
+
     # -- profiler interface -------------------------------------------------
     def isolated_run(self, req: Request) -> ProfileRecord:
         pre = self.cm.preprocess_time(req)

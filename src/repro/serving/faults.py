@@ -128,6 +128,11 @@ class FaultPlan:
     replica_kills: dict = field(default_factory=dict)  # replica -> time
     # (rid, chunk) -> ("timeout"|"corrupt", n attempts it outlasts)
     migration_faults: dict = field(default_factory=dict)
+    # crash recovery (ISSUE 10): replica -> seconds after its death that
+    # a fresh engine restarts in its slot (rejoin is further gated by the
+    # fleet's warm-up window). Absent replicas stay down forever — the
+    # pre-ISSUE-10 behaviour, and the bit-exact default.
+    restart_delays: dict = field(default_factory=dict)
 
     def __post_init__(self):
         # run-scoped observation state (see module docstring)
@@ -243,6 +248,11 @@ class FaultPlan:
     def kill_time(self, replica: int) -> float | None:
         return self.replica_kills.get(replica)
 
+    def restart_delay(self, replica: int) -> float | None:
+        """Seconds after death until a fresh engine restarts in this
+        replica's slot (ISSUE 10), or None — it stays down."""
+        return self.restart_delays.get(replica)
+
     # -- page-chain migration faults (ISSUE 9) -----------------------------
     def migration_fault(self, rid: str, chunk: int,
                         attempt: int) -> str | None:
@@ -287,6 +297,7 @@ class FaultPlan:
                 "step_faults": len(self.step_faults),
                 "replica_kills": dict(self.replica_kills),
                 "migration_faults": len(self.migration_faults),
+                "restart_delays": dict(self.restart_delays),
             },
             "injected": dict(self.injected),
         }

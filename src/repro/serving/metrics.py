@@ -160,6 +160,9 @@ def summarize_fleet(fleet) -> dict:
             "pinned_encoder_entries": (
                 eng.encoder_cache.stats()["pinned"]
                 if eng.encoder_cache is not None else 0),
+            "journal_records": (len(eng.journal)
+                                if getattr(eng, "journal", None) is not None
+                                else 0),
         })
     drains = getattr(fleet, "drain_events", [])
     return {
@@ -181,6 +184,13 @@ def summarize_fleet(fleet) -> dict:
         "kill_events": fleet.kill_events,
         "redispatched": fleet.redispatched,
         "lost": len(fleet.lost),
+        # crash recovery (ISSUE 10): restart/rejoin history + the
+        # journal-replay cross-check tally (zero-length fleet fields
+        # when summarizing a plain Router)
+        "restart_events": getattr(fleet, "restart_events", []),
+        "journal_checks": getattr(fleet, "journal_checks", 0),
+        "journal_mismatches": list(getattr(fleet, "journal_mismatches",
+                                           [])),
     }
 
 

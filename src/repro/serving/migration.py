@@ -202,6 +202,61 @@ def simulate_transfer(manifest: list[PageRecord], rid: str, start: float,
     return res
 
 
+def warm_import(src_engine, dst_engine, start: float,
+                cfg: MigrationConfig, plan=None,
+                max_pages: int = 256) -> MigrationResult:
+    """Warm a restarted replica's prefix trie from a healthy peer
+    (ISSUE 10): ship the peer's hottest cached chains over the same
+    chunked/verified page-chain protocol a migration uses and install
+    them zero-ref/evictable on the target (``import_chain`` dedupes, so
+    re-warming is idempotent). Purely a latency optimization — any
+    truncation (faults, capacity) just means a colder cache on rejoin;
+    the pages are owned by nobody, so nothing can leak. Returns one
+    aggregate result; ``finish_time`` is when the last verified chunk
+    landed (the fleet gates rejoin on it)."""
+    total = MigrationResult(status="migrated", finish_time=start)
+    chains = src_engine.allocator.export_hot_chains(max_pages)
+    exec_ = src_engine.executor
+    can_payload = hasattr(exec_, "export_page_payload") and \
+        getattr(exec_, "supports_prefix_cache", False)
+    t = start
+    for ci, chain in enumerate(chains):
+        manifest = []
+        for i, (runs, ptoks, page) in enumerate(chain):
+            payload = (exec_.export_page_payload([page])[0]
+                       if can_payload else None)
+            manifest.append(PageRecord(i, runs, ptoks, payload).seal())
+        res = simulate_transfer(manifest, f"warm-{ci}", t, cfg, plan)
+        total.chunks_sent += res.chunks_sent
+        total.retries += res.retries
+        t = max(t, res.finish_time)
+        if res.delivered:
+            by_index = {r.index: r for r in res.delivered}
+            installed = dst_engine.allocator.import_chain(
+                [(r.runs, r.tokens) for r in res.delivered])
+            fresh_pages, fresh_payloads = [], []
+            for idx, page, fresh in installed:
+                if fresh:
+                    total.pages_imported += 1
+                    rec = by_index[idx]
+                    if rec.payload is not None:
+                        fresh_pages.append(page)
+                        fresh_payloads.append(rec.payload)
+                else:
+                    total.pages_deduped += 1
+            if fresh_pages and hasattr(dst_engine.executor,
+                                       "import_page_payload"):
+                dst_engine.executor.import_page_payload(fresh_pages,
+                                                        fresh_payloads)
+            if getattr(dst_engine, "journal", None) is not None:
+                dst_engine.journal.record(t, "migrate_in", f"warm-{ci}",
+                                          len(installed))
+        if res.status != "migrated":
+            total.status = "fallback"
+    total.finish_time = t
+    return total
+
+
 def apply_to_target(engine, req: Request, res: MigrationResult) -> None:
     """Install the delivered verified prefix on the target engine and arm
     the request's transfer hold. Safe for any delivered prefix (including
@@ -226,6 +281,12 @@ def apply_to_target(engine, req: Request, res: MigrationResult) -> None:
                 res.pages_deduped += 1
         if fresh_pages and hasattr(engine.executor, "import_page_payload"):
             engine.executor.import_page_payload(fresh_pages, fresh_payloads)
+        if getattr(engine, "journal", None) is not None:
+            # informational (replay no-op): the chain enters the target's
+            # *cache*, not the rid's ownership — the request re-claims it
+            # through ordinary admission, which journals the acquire
+            engine.journal.record(res.finish_time, "migrate_in", req.rid,
+                                  len(res.delivered))
         # only a transfer that landed something holds the request; a pure
         # fallback is a plain re-dispatch (nothing to wait for)
         req.ready_floor = res.finish_time

@@ -191,6 +191,12 @@ class Router:
         no-events timeline bit-identical to this one."""
         return pending
 
+    def _revivable(self) -> bool:
+        """Whether a fully-idle/dead fleet can still come back (armed
+        restarts, fleet tier). The base router's replicas never return,
+        so an empty live set always ends the run."""
+        return False
+
     def _next_arrival(self, i: int, pending: list[Request],
                       remaining: list[list[Request]]) -> float | None:
         """Earliest arrival that could still reach replica ``i`` (the
@@ -217,6 +223,12 @@ class Router:
                 for i, eng in enumerate(self.engines):
                     if not self.alive[i]:
                         continue
+                    if self.killed_at[i] is not None:
+                        # already died once and was restarted (fleet tier,
+                        # ISSUE 10): the kill schedule must not re-fire on
+                        # the fresh engine. No-op for the base router
+                        # (alive stays False after a kill).
+                        continue
                     kt = self.faults.kill_time(i)
                     if kt is None:
                         continue
@@ -227,6 +239,10 @@ class Router:
             live = [i for i in range(n) if self.alive[i]
                     and (not self.engines[i].idle or remaining[i])]
             if not live:
+                if self._revivable():
+                    # armed restarts (fleet tier): the next _fleet_tick
+                    # fires them by jumping to their scheduled time
+                    continue
                 break
             i = min(live, key=lambda j: self.engines[j].now)
             remaining[i] = self.engines[i].step(remaining[i])

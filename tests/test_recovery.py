@@ -1,0 +1,307 @@
+"""Crash recovery (ISSUE 10): lifecycle journal + replay oracle, replica
+restart & rejoin, health-scored auto-drain.
+
+Central properties:
+  * the journal is a pure recording — a journal-enabled event-free fleet
+    run is bit-identical to the plain router;
+  * replaying a replica's journal reconstructs its live accounting
+    bit-exactly (terminal states, owned pages, encoder pins) — a second
+    independent oracle, checked at every kill/drain and end-of-run;
+  * killed/drained replicas restart on schedule, rejoin after the
+    warm-up gate, and the kill schedule never re-fires on the fresh
+    engine; a whole-fleet outage with an armed restart loses nothing;
+  * any sampled restart schedule x fault plan x drain/kill race
+    conserves pages and pins fleet-wide (retired engines included) and
+    leaves every request in exactly one terminal state on exactly one
+    replica (the hypothesis property).
+"""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import sim_stack_cached
+from repro.serving.engine import EngineConfig
+from repro.serving.executors import SimExecutor, make_cost_model
+from repro.serving.faults import FaultPlan
+from repro.serving.fleet import Fleet, FleetConfig, ReplicaState
+from repro.serving.journal import Journal, replay, verify_engine
+from repro.serving.metrics import lifecycle_counts, summarize_fleet
+from repro.serving.request import State
+from repro.serving.router import Router
+from repro.serving.workload import WorkloadConfig, generate
+
+POLICY = "tcm"
+
+
+def _wl(n=40, seed=0, **kw):
+    kw.setdefault("duplicate_prob", 0.3)
+    kw.setdefault("shared_prefix_prob", 0.3)
+    kw.setdefault("rate", 3.0)
+    return generate(WorkloadConfig(mix="MH", num_requests=n,
+                                   seed=seed, **kw))
+
+
+def _mk(cls, n=2, plan=None, routing="least-loaded", cfg_kw=None, **kw):
+    _ex, classifier, _cfg, _prof, _est = sim_stack_cached()
+    cm = make_cost_model("llava-7b")
+    cfg = dict(kv_pages=2048, token_budget=512)
+    cfg.update(cfg_kw or {})
+    return cls([SimExecutor(cm) for _ in range(n)], classifier,
+               EngineConfig(**cfg),
+               policy=POLICY, routing=routing, faults=plan, **kw)
+
+
+def _snapshot(reqs):
+    return {r.rid: (r.state.value, r.finish_time, r.first_token_time,
+                    r.decoded, r.preemptions, r.cached_prefix_tokens)
+            for r in reqs}
+
+
+def _assert_recovery_clean(fleet, reqs):
+    """Fleet-wide conservation including retired (pre-restart) engines,
+    plus the journal-replay identity on every engine that ever served."""
+    engines = list(fleet.engines) + [e for _i, e in fleet.retired]
+    for eng in engines:
+        eng.allocator.check_invariants()
+        assert eng.allocator.used_pages == 0
+        if eng.encoder_cache is not None:
+            stats = eng.encoder_cache.stats()
+            assert stats["pin_refs"] == 0 and stats["pinned"] == 0
+        assert eng._enc_pins == {}
+    counts = lifecycle_counts(reqs)
+    assert counts["in_flight"] == 0
+    assert (counts["finished"] + counts["rejected"] + counts["failed"]
+            + counts["cancelled"]) == len(reqs)
+    finished = [r.rid for eng in engines for r in eng.finished]
+    assert len(finished) == len(set(finished))
+    assert not fleet.lost
+    assert not fleet._orphans
+    assert fleet.verify_journals() == []
+
+
+# ---------------- journal + replay oracle units ------------------------------
+
+
+def test_journal_replay_folds_lifecycle():
+    j = Journal()
+    j.record(0.0, "pin", "a", "h1")
+    j.record(0.0, "state", "a", "encoding")
+    j.record(1.0, "state", "a", "waiting")
+    j.record(1.0, "unpin", "a", "h1")
+    j.record(2.0, "acquire", "a", (1, 2))
+    j.record(2.5, "acquire", "a", (3,))
+    j.record(3.0, "state", "a", "running")
+    st_ = replay(j.records)
+    assert st_.inflight == {"a"}                  # ingested, not terminal
+    assert st_.owned == {"a": [1, 2, 3]}          # acquires accumulate
+    assert st_.pins == {}                         # pin released exactly once
+    assert st_.stage["a"] == "running"
+    j.record(4.0, "release", "a")
+    j.record(4.0, "terminal", "a", "finished")
+    st2 = replay(j.records)
+    assert st2.terminal == {"a": "finished"}
+    assert st2.owned == {} and st2.inflight == set()
+
+
+def test_journal_export_then_reingest_same_engine():
+    """An exported rid leaves the in-flight set; a later re-ingest on the
+    same engine (failback) re-enters it — the export mark is per-episode,
+    not forever."""
+    j = Journal()
+    j.record(0.0, "state", "b", "waiting")
+    j.record(1.0, "release", "b")
+    j.record(1.0, "export", "b")
+    st1 = replay(j.records)
+    assert st1.inflight == set() and "b" in st1.exported
+    j.record(2.0, "state", "b", "waiting")
+    st2 = replay(j.records)
+    assert "b" not in st2.exported and st2.inflight == {"b"}
+
+
+def test_verify_engine_catches_tampering():
+    """The oracle is not a rubber stamp: a forged journal record that the
+    live allocator never saw is reported as a mismatch."""
+    router = _mk(Router, n=1, cfg_kw=dict(journal=True))
+    reqs = _wl(10, seed=3)
+    router.run_stepped(reqs)
+    eng = router.engines[0]
+    assert verify_engine(eng) == []
+    eng.journal.record(eng.now, "acquire", "ghost", (1, 2, 3))
+    msgs = verify_engine(eng)
+    assert msgs and any("ghost" in m for m in msgs)
+
+
+def test_journal_recording_is_bit_exact():
+    """Journal on vs journal off: identical timelines (the journal is
+    observation, never perturbation), and every replay agrees."""
+    a, b = _wl(40, seed=11), _wl(40, seed=11)
+    base = _mk(Router, n=2)
+    base.run_stepped(a)
+    fleet = _mk(Fleet, n=2, cfg_kw=dict(journal=True), fleet=FleetConfig())
+    fleet.run_stepped(b)
+    assert _snapshot(a) == _snapshot(b)
+    assert all(len(e.journal) > 0 for e in fleet.engines)
+    assert fleet.verify_journals() == []
+    fs = summarize_fleet(fleet)
+    assert fs["journal_checks"] >= 2 and fs["journal_mismatches"] == []
+    assert all(r["journal_records"] > 0 for r in fs["replicas"])
+
+
+# ---------------- restart & rejoin -------------------------------------------
+
+
+def test_kill_restart_rejoin_cycle():
+    plan = FaultPlan(replica_kills={1: 4.0}, restart_delays={1: 2.0})
+    fleet = _mk(Fleet, n=2, plan=plan, cfg_kw=dict(journal=True),
+                fleet=FleetConfig(restart_warmup_s=1.0))
+    reqs = _wl(60, seed=12, rate=5.0)
+    done = fleet.run_stepped(reqs)
+    assert len(fleet.kill_events) == 1       # schedule never re-fires on
+    #                                          the fresh engine
+    assert len(fleet.restart_events) == 1
+    ev = fleet.restart_events[0]
+    assert ev["replica"] == 1
+    assert ev["restarted"] >= ev["died"] + 2.0
+    assert ev["rejoin_at"] >= ev["restarted"] + 1.0
+    assert any(h["state"] == "rejoined" and h["replica"] == 1
+               for h in fleet.health_events)
+    assert fleet.replica_state[1] is ReplicaState.HEALTHY
+    assert len(fleet.retired) == 1
+    # the fresh engine re-entered routing and did real work
+    assert fleet.engines[1].finished
+    counts = lifecycle_counts(reqs)
+    assert counts["finished"] == len(reqs)
+    # Fleet.run_stepped counts retired-engine completions exactly once
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    _assert_recovery_clean(fleet, reqs)
+
+
+def test_restart_warms_prefix_trie_from_healthiest_peer():
+    plan = FaultPlan(replica_kills={1: 5.0}, restart_delays={1: 1.0})
+    fleet = _mk(Fleet, n=3, plan=plan, cfg_kw=dict(journal=True),
+                fleet=FleetConfig(restart_warm_pages=256,
+                                  restart_warmup_s=1.0))
+    reqs = _wl(80, seed=13, rate=6.0)
+    fleet.run_stepped(reqs)
+    ev = fleet.restart_events[0]
+    assert ev["warm_source"] is not None and ev["warm_source"] != 1
+    assert ev["warm_pages_imported"] + ev["warm_pages_deduped"] > 0
+    # the rejoin gate waited for both warm-up dwell and the transfer
+    assert ev["rejoin_at"] >= ev["restarted"] + 1.0
+    # warmed pages enter as cached/evictable content, never ownership
+    _assert_recovery_clean(fleet, reqs)
+
+
+def test_drained_replica_restarts_on_fleet_schedule():
+    fleet = _mk(Fleet, n=3, cfg_kw=dict(journal=True),
+                fleet=FleetConfig(drains={1: 5.0}, restarts={1: 3.0},
+                                  restart_warm_pages=128,
+                                  restart_warmup_s=1.0))
+    reqs = _wl(120, seed=3, rate=4.0)
+    fleet.run_stepped(reqs)
+    assert len(fleet.drain_events) == 1      # the drain entry fires once:
+    #                                          no re-drain after rejoin
+    assert fleet.drain_events[0]["cause"] == "operator"
+    ev = fleet.restart_events[0]
+    assert ev["replica"] == 1 and ev["died"] is not None
+    assert fleet.engines[1].finished         # fresh work post-rejoin
+    _assert_recovery_clean(fleet, reqs)
+
+
+def test_whole_fleet_outage_with_armed_restart_loses_nothing():
+    """Both replicas die at once; one has a scheduled restart. The
+    outage is transient: the crashed in-flight is orphaned (not lost),
+    the restart fires by jumping the dead clock, and the rejoined slot
+    finishes the entire workload."""
+    plan = FaultPlan(replica_kills={0: 1.0, 1: 1.0},
+                     restart_delays={0: 2.0})
+    fleet = _mk(Fleet, n=2, plan=plan, cfg_kw=dict(journal=True),
+                fleet=FleetConfig())
+    reqs = _wl(50, seed=16, rate=4.0)
+    done = fleet.run_stepped(reqs)
+    counts = lifecycle_counts(reqs)
+    assert counts["finished"] == len(reqs)
+    assert len(done) == len(reqs)
+    assert len(fleet.restart_events) == 1
+    _assert_recovery_clean(fleet, reqs)
+
+
+def test_kill_recovery_manifest_comes_from_journal():
+    """A busy-replica crash recovers its in-flight from the journal's
+    replayed stage map; the recovered set matches the live derivation
+    (zero mismatches) and the redispatch count."""
+    plan = FaultPlan(replica_kills={0: 2.0}, restart_delays={0: 5.0})
+    fleet = _mk(Fleet, n=3, plan=plan, cfg_kw=dict(journal=True),
+                fleet=FleetConfig())
+    reqs = _wl(80, seed=5, rate=8.0)
+    fleet.run_stepped(reqs)
+    ev = fleet.kill_events[0]
+    assert "recovered_stages" in ev
+    assert sum(ev["recovered_stages"].values()) == ev["redispatched"]
+    _assert_recovery_clean(fleet, reqs)
+
+
+# ---------------- health-scored auto-drain -----------------------------------
+
+
+def test_auto_drain_after_persistent_degradation():
+    """Tiny backlog threshold keeps replicas DEGRADED; after
+    ``auto_drain_window`` consecutive ticks each starts its own graceful
+    drain through the operator path, tagged cause="auto"."""
+    fleet = _mk(Fleet, n=3, cfg_kw=dict(journal=True),
+                fleet=FleetConfig(degraded_backlog=2, health_window=2,
+                                  auto_drain_window=4))
+    reqs = _wl(100, seed=15, rate=10.0)
+    fleet.run_stepped(reqs)
+    autos = [ev for ev in fleet.drain_events if ev["cause"] == "auto"]
+    assert autos
+    assert any(h.get("cause") == "auto" and h["state"] == "draining"
+               for h in fleet.health_events)
+    _assert_recovery_clean(fleet, reqs)
+
+
+# ---------------- satellite: _route fallback load accounting -----------------
+
+
+def test_route_fallback_does_not_leak_load_onto_ineligible_replica():
+    """Regression (ISSUE 10 satellite): the inherited least-loaded mode
+    bumps ``_load[i]`` before the fleet discovers i is ineligible; the
+    fallback must remove that bump or dead/draining replicas accumulate
+    phantom load that skews every comparison after they restart."""
+    fleet = _mk(Fleet, n=2, fleet=FleetConfig())
+    fleet.replica_state[0] = ReplicaState.DRAINING
+    for r in _wl(10, seed=9):
+        assert fleet._route(r) == 1
+    assert fleet._load[0] == 0.0
+    assert fleet._load[1] > 0.0
+
+
+# ---------------- the recovery chaos property --------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       kill_t=st.floats(0.0, 12.0),     # < 1.0 means "no kill"
+       drain_t=st.floats(1.0, 12.0),
+       restart_delay=st.floats(0.5, 5.0),
+       warm=st.sampled_from([0, 128]),
+       n_replicas=st.sampled_from([2, 3]))
+def test_any_restart_schedule_conserves_and_replays_exactly(
+        seed, kill_t, drain_t, restart_delay, warm, n_replicas):
+    """Whatever the sampled schedule does — a kill racing a drain, every
+    replica armed to restart, warm imports on or off — pages and pins
+    are conserved fleet-wide (retired engines included), each request
+    lands in exactly one terminal state on exactly one replica, and
+    every journal replays to its live accounting bit-exactly."""
+    kills = {n_replicas - 1: kill_t} if kill_t >= 1.0 else {}
+    plan = FaultPlan(seed=seed, replica_kills=kills,
+                     restart_delays={i: restart_delay
+                                     for i in range(n_replicas)})
+    fleet = _mk(Fleet, n=n_replicas, plan=plan, cfg_kw=dict(journal=True),
+                fleet=FleetConfig(drains={0: drain_t},
+                                  restart_warm_pages=warm,
+                                  restart_warmup_s=1.0))
+    reqs = _wl(40, seed=seed % 100)
+    done = fleet.run_stepped(reqs)
+    _assert_recovery_clean(fleet, reqs)
+    assert sorted(r.rid for r in done) == \
+        sorted(r.rid for r in reqs if r.state is State.FINISHED)
